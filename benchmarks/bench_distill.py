@@ -1,0 +1,130 @@
+"""Paper Fig. 9 + Fig. 10 — distillation.
+
+Fig. 9 (teacher micro-batch sweep) is REPRODUCED BY MEASUREMENT: a real
+forward-only teacher jit on CPU, wall-clocked at mbs ∈ {1, 2, 4, 8}, with
+peak memory from ``compiled.memory_analysis()`` — same methodology as the
+paper, scaled to this container.  The analytic cost-model curve (calibrated
+to the paper's 2.6× at mbs 4) is reported alongside.
+
+Fig. 10 (distillation throughput): two-stage-planned Maestro vs the
+Megatron-uniform baseline, with the baseline's teacher mbs forced to the
+student's memory constraint; sensitivity over that constraint reported.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.paper_workloads import (qwen35_400b_a17b_proxy,
+                                        qwen3next_80b_a3b_proxy,
+                                        run_distill_workload)
+from repro.configs import get_reduced
+from repro.core import cost_model as cmdl
+from repro.core.types import ParallelConfig
+from repro.models.model import build_model
+
+
+def _measure_teacher_mbs_sweep():
+    """Real measurement: forward-only throughput + compile-time memory of
+    a small dense teacher at different micro-batch sizes."""
+    # weight-dominated regime (like a 400B teacher on real chips): model
+    # weights ≫ per-sample activations, so mbs growth barely moves peak
+    # memory — the mechanism behind the paper's "nearly flat" claim
+    cfg = get_reduced("granite-3-8b").replace(
+        dtype="float32", num_layers=6, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    S = 128
+    out = []
+    for mbs in (1, 2, 4, 8):
+        toks = jnp.zeros((mbs, S), jnp.int32)
+        fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t}))
+        lowered = fwd.lower(params, toks)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                + mem.output_size_in_bytes)
+        compiled(params, toks)[0].block_until_ready()
+        t0 = time.perf_counter()
+        n = 6
+        for _ in range(n):
+            r = compiled(params, toks)
+        jax.block_until_ready(r)
+        dt = (time.perf_counter() - t0) / n
+        out.append((mbs, mbs / dt, peak, dt))
+    return out
+
+
+def run() -> list:
+    rows = []
+
+    # ---- Fig. 9: measured ----
+    sweep = _measure_teacher_mbs_sweep()
+    base_thr = sweep[0][1]
+    base_mem = sweep[0][2]
+    for mbs, thr, peak, dt in sweep:
+        rows.append((f"fig9_measured_mbs{mbs}_thr_norm", dt * 1e6,
+                     round(thr / base_thr, 3)))
+        rows.append((f"fig9_measured_mbs{mbs}_mem_norm", 0.0,
+                     round(peak / base_mem, 3)))
+
+    # ---- Fig. 9: cost-model curve (calibrated to the paper's 2.6×) ----
+    cfg = qwen35_400b_a17b_proxy()
+    t1 = cmdl.microbatch_time(cfg, ParallelConfig(tp=16, pp=4, mbs=1),
+                              8192, forward_only=True)
+    for mbs in (1, 2, 4, 8):
+        tm = cmdl.microbatch_time(cfg, ParallelConfig(tp=16, pp=4,
+                                                      mbs=mbs),
+                                  8192, forward_only=True)
+        rows.append((f"fig9_model_mbs{mbs}_thr_norm", 0.0,
+                     round((mbs / tm) / (1 / t1), 3)))
+
+    # ---- Fig. 10: Maestro vs uniform baseline ----
+    for bmbs in (1, 2, 4):
+        r = run_distill_workload(qwen35_400b_a17b_proxy(),
+                                 qwen3next_80b_a3b_proxy(), gpus=1024,
+                                 global_batch=512, seq_len=8192,
+                                 teacher_baseline_mbs=bmbs)
+        rows.append((f"fig10_speedup_e2e_bmbs{bmbs}", 0.0,
+                     round(r.speedup, 3)))
+        rows.append((f"fig10_speedup_per_gpu_bmbs{bmbs}", 0.0,
+                     round(r.per_gpu_speedup, 3)))
+    rows.append(("fig10_extra_gpu_frac", 0.0,
+                 round((r.maestro_gpus - r.baseline_gpus)
+                       / r.baseline_gpus, 3)))
+    # v5e-realistic pairing from the assigned pool (the 442B-proxy teacher
+    # over-allocates on 16-GiB chips just to fit weights — hardware
+    # adaptation note in EXPERIMENTS.md)
+    from repro.configs import get_config as _gc
+    r2 = run_distill_workload(_gc("mixtral-8x22b"),
+                              _gc("moonshot-v1-16b-a3b"), gpus=512,
+                              global_batch=512, seq_len=8192,
+                              teacher_baseline_mbs=1)
+    rows.append(("fig10_assigned_pair_speedup_e2e", 0.0,
+                 round(r2.speedup, 3)))
+    rows.append(("fig10_assigned_pair_per_gpu", 0.0,
+                 round(r2.per_gpu_speedup, 3)))
+    rows.append(("fig10_assigned_pair_extra_gpu_frac", 0.0,
+                 round((r2.maestro_gpus - r2.baseline_gpus)
+                       / r2.baseline_gpus, 3)))
+    # self-distillation: teacher overlaps with a fraction of the GPUs
+    from repro.configs import get_config
+    from repro.core.graph import build_distill_graph
+    from repro.core.planner import plan
+    g = build_distill_graph(get_config("granite-3-8b"),
+                            get_config("granite-3-8b"))
+    p = plan(g, critical_gpus=256, seq_len=4096, global_batch=256)
+    rows.append(("self_distill_teacher_gpu_frac", 0.0,
+                 round(p.sections["teacher"].n_gpus / 256, 3)))
+    rows.append(("self_distill_fanout", 0.0,
+                 p.sections["teacher"].fanout))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,90 @@
+"""Kernel micro-benchmarks on CPU: jitted wall time of the memory-efficient
+implementations vs naive materialization, plus derived FLOP rates.
+
+(Pallas kernels execute in interpret mode on CPU — correctness is tested;
+their perf story is the §Roofline/§Perf analysis, not CPU wall time.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.distill_kl import distill_kl_chunked_jnp
+from repro.kernels.ssd_scan import ssd_chunked_jnp
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> list:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+
+    # flash attention vs naive
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    flops = 4 * B * H * S * S * D / 2
+    f_flash = jax.jit(lambda q, k, v: ref.flash_attention_jnp(
+        q, k, v, causal=True, block_q=256, block_kv=256))
+    f_naive = jax.jit(lambda q, k, v: ref.mha_reference(q, k, v,
+                                                        causal=True))
+    t1 = _time(f_flash, q, k, v)
+    t2 = _time(f_naive, q, k, v)
+    rows.append(("flash_jnp_1k", round(t1 * 1e6, 1),
+                 round(flops / t1 / 1e9, 2)))
+    rows.append(("naive_attn_1k", round(t2 * 1e6, 1),
+                 round(flops / t2 / 1e9, 2)))
+
+    # distill KL chunked vs naive (vocab 32k)
+    N, Ds, V = 256, 512, 32768
+    hs = jax.random.normal(ks[0], (N, Ds))
+    ws = jax.random.normal(ks[1], (Ds, V)) * 0.05
+    ht = jax.random.normal(ks[2], (N, Ds))
+    wt = jax.random.normal(ks[3], (Ds, V)) * 0.05
+    f_ch = jax.jit(lambda *a: distill_kl_chunked_jnp(*a, temperature=2.0,
+                                                     block_v=2048))
+    f_nv = jax.jit(lambda *a: ref.distill_kl_reference(*a,
+                                                       temperature=2.0))
+    t1 = _time(f_ch, hs, ws, ht, wt)
+    t2 = _time(f_nv, hs, ws, ht, wt)
+    kl_flops = 2 * 2 * N * Ds * V
+    rows.append(("distill_kl_chunked_32kvocab", round(t1 * 1e6, 1),
+                 round(kl_flops / t1 / 1e9, 2)))
+    rows.append(("distill_kl_naive_32kvocab", round(t2 * 1e6, 1),
+                 round(kl_flops / t2 / 1e9, 2)))
+
+    # SSD chunked vs sequential scan
+    b, s, h, p, n = 1, 2048, 8, 64, 64
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    Cm = jax.random.normal(ks[4], (b, s, n))
+    Dm = jax.random.normal(ks[5], (h,))
+    f_ch = jax.jit(lambda *a: ssd_chunked_jnp(*a, chunk=128))
+    f_sq = jax.jit(ref.ssd_reference)
+    t1 = _time(f_ch, x, dt, A, Bm, Cm, Dm)
+    t2 = _time(f_sq, x, dt, A, Bm, Cm, Dm)
+    ssd_flops = b * s * h * p * n * 6
+    rows.append(("ssd_chunked_2k", round(t1 * 1e6, 1),
+                 round(ssd_flops / t1 / 1e9, 2)))
+    rows.append(("ssd_sequential_2k", round(t2 * 1e6, 1),
+                 round(ssd_flops / t2 / 1e9, 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

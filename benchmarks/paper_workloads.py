@@ -1,0 +1,171 @@
+"""Proxy configs + iteration-time models for the paper's evaluation
+workloads (§4).
+
+The paper benchmarks Qwen3.5-400B-A17B and Qwen3-Next-80B-A3B (unreleased
+weights; public dims incomplete), so we use dimension-faithful *proxies*
+matched on the quantities the cost model consumes: total params (memory),
+active params (compute/token), and component asymmetry (ViT 0.4B @ 4× seq;
+frozen teacher vs trainable student).
+
+Baseline = Megatron-LM-style uniform config: every component runs on the
+full cluster with the critical section's parallelism and micro-batch size,
+serially within an iteration.  Maestro = two-stage planner output +
+wavefront overlap (the makespan is cross-checked with the event simulator,
+not assumed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core import cost_model as cmdl
+from repro.core.graph import build_distill_graph, build_vlm_graph
+from repro.core.planner import Plan, plan, _iter_time
+from repro.core.scheduler import schedule_global_batch
+from repro.core.simulator import Sample, simulate_fanout
+from repro.core.types import ArchConfig, ParallelConfig, SectionConfig
+from repro.models.vlm import vit_config
+
+
+def qwen35_400b_a17b_proxy() -> ArchConfig:
+    """~430B total / ~16B active MoE (96e top-2)."""
+    return ArchConfig(
+        name="qwen3.5-400b-a17b-proxy", family="moe", num_layers=60,
+        d_model=6144, num_heads=48, num_kv_heads=8, d_ff=4096,
+        vocab_size=151936, head_dim=128, num_experts=96,
+        experts_per_token=2)
+
+
+def qwen3next_80b_a3b_proxy() -> ArchConfig:
+    """~75B total / ~3.3B active MoE-hybrid (64e top-2, 1:3 attn)."""
+    return ArchConfig(
+        name="qwen3-next-80b-a3b-proxy", family="hybrid", num_layers=48,
+        d_model=2048, num_heads=16, num_kv_heads=8, d_ff=5464,
+        vocab_size=151936, head_dim=128, num_experts=64,
+        experts_per_token=2, attn_period=4, attn_offset=3,
+        moe_period=1, moe_offset=0, ssm_state=128, ssm_headdim=64)
+
+
+def vit_04b(lm_dim: int) -> ArchConfig:
+    """~0.4B ViT encoder, 4:1 token downsampling."""
+    return vit_config(num_layers=20, d_model=1280, num_heads=16,
+                      d_ff=5120, patch_dim=1176, downsample=4,
+                      out_dim=lm_dim, name="vit-0.4b")
+
+
+@dataclass
+class WorkloadResult:
+    baseline_iter: float
+    maestro_iter: float
+    baseline_gpus: int
+    maestro_gpus: int
+    relative_efficiency: float      # vs text-only critical-section time
+    critical_utilization: float
+    plan: Plan
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_iter / self.maestro_iter
+
+    @property
+    def per_gpu_speedup(self) -> float:
+        return self.speedup * self.baseline_gpus / self.maestro_gpus
+
+
+def _uniform_component_time(cfg: ArchConfig, crit_parallel: ParallelConfig,
+                            seq_len: int, samples: int, *,
+                            trainable: bool) -> float:
+    """Component executed with the critical section's (uniform) config on
+    the full cluster — the Megatron-LM baseline behaviour."""
+    return _iter_time(cfg, crit_parallel, seq_len, samples,
+                      trainable=trainable, hw=cmdl.V5E)
+
+
+def run_vlm_workload(lm: ArchConfig, *, gpus: int = 512,
+                     global_batch: int = 512, seq_len: int = 32768,
+                     vision_ratio: float = 0.25,
+                     image_tokens: int = 6144,
+                     baseline_pp_bubble: bool = True) -> WorkloadResult:
+    """image_tokens: visual tokens the LM consumes per vision sample; the
+    ViT attends over 4× that many raw patches (pre-downsampling) — at 32K
+    multimodal contexts this quadratic term is what makes the ViT section
+    non-negligible (paper §2.1)."""
+    vit = vit_04b(lm.d_model)
+    g = build_vlm_graph(vit, lm)
+    # the ViT processes 4× the visual tokens the LM consumes
+    g.sections["vit"] = g.sections["vit"].replace(
+        seq_scale=4 * image_tokens / seq_len)
+    p = plan(g, critical_gpus=gpus, seq_len=seq_len,
+             global_batch=global_batch,
+             activation_rates={"vit": vision_ratio})
+    llm_p, vit_p = p.sections["llm"], p.sections["vit"]
+
+    # ---- Megatron-style baseline: uniform config, serial components ----
+    vit_seq = 4 * image_tokens
+    n_vis_samples = max(int(global_batch * vision_ratio), 1)
+    base_vit = _uniform_component_time(
+        vit, llm_p.parallel, vit_seq, n_vis_samples, trainable=True)
+    baseline_iter = llm_p.t_iter + base_vit
+    if baseline_pp_bubble and llm_p.parallel.pp > 1:
+        # data-dependent activation creates dynamic pipeline bubbles: each
+        # vision microbatch inflates its stage time; every pipeline refill
+        # (p−1 of them) pays roughly one average vision-delay (§2.1)
+        n_micro = max(global_batch // (llm_p.parallel.dp
+                                       * llm_p.parallel.mbs), 1)
+        baseline_iter += (llm_p.parallel.pp - 1) * (base_vit / n_micro)
+
+    # ---- Maestro: overlap, cross-checked with the wavefront simulator ----
+    dp = llm_p.parallel.dp
+    per_rank = global_batch // dp
+    t_f_c = llm_p.t_iter / global_batch / 3            # fwd ≈ 1/3
+    t_b_c = 2 * t_f_c
+    vit_fwd = (vit_p.t_iter / max(int(global_batch * vision_ratio), 1)
+               / 3)
+    vit_bwd = 2 * vit_fwd
+    samples = []
+    n_vis = int(global_batch * vision_ratio)
+    for i in range(global_batch):
+        if i < n_vis:
+            samples.append(Sample(i, vit_fwd, t_f_c, 0, 0, t_b_c, vit_bwd))
+        else:
+            samples.append(Sample(i, 0, t_f_c, 0, 0, t_b_c, 0))
+    fanout = vit_p.fanout
+    per_rank_scheds, _ = schedule_global_batch(samples[:per_rank * fanout],
+                                               fanout)
+    sim = simulate_fanout(per_rank_scheds)
+    # scale the simulated group makespan back to full-iteration terms
+    group_tokens = per_rank * fanout
+    sim_iter = sim.makespan * (per_rank / (group_tokens / fanout))
+    maestro_iter = max(llm_p.t_iter, vit_p.t_iter, sim_iter)
+    text_only = llm_p.t_iter
+    return WorkloadResult(
+        baseline_iter, maestro_iter, gpus, gpus + vit_p.n_gpus,
+        relative_efficiency=text_only / maestro_iter,
+        critical_utilization=sim.critical_utilization, plan=p)
+
+
+def run_distill_workload(teacher: ArchConfig, student: ArchConfig, *,
+                         gpus: int = 512, global_batch: int = 512,
+                         seq_len: int = 8192,
+                         teacher_baseline_mbs: int = 1) -> WorkloadResult:
+    """teacher_baseline_mbs: the micro-batch size the uniform baseline
+    forces on the teacher (dictated by the *student's* memory constraint —
+    the paper's §2.2 pathology; Fig. 9 shows the teacher wants ≥4)."""
+    g = build_distill_graph(teacher, student)
+    p = plan(g, critical_gpus=gpus, seq_len=seq_len,
+             global_batch=global_batch)
+    st, te = p.sections["student"], p.sections["teacher"]
+
+    # baseline: teacher forward at the student's uniform config (including
+    # the student's memory-constrained micro-batch size) then student step
+    base_teacher = _uniform_component_time(
+        teacher, st.parallel.replace(mbs=teacher_baseline_mbs), seq_len,
+        global_batch, trainable=False)
+    baseline_iter = st.t_iter + base_teacher
+
+    maestro_iter = max(st.t_iter, te.t_iter)
+    return WorkloadResult(
+        baseline_iter, maestro_iter, gpus, gpus + te.n_gpus,
+        relative_efficiency=st.t_iter / maestro_iter,
+        critical_utilization=1.0 if te.t_iter <= st.t_iter else
+        st.t_iter / te.t_iter, plan=p)

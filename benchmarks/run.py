@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
+
+* bench_scheduler — Fig. 7 + Algorithm 1 (§3.4)
+* bench_vlm       — Fig. 8 (VLM training, §4.1)
+* bench_distill   — Fig. 9 + Fig. 10 (distillation, §4.2)
+* bench_kernels   — kernel layer (substrate)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_distill, bench_kernels, bench_scheduler,
+                            bench_vlm)
+    modules = [("scheduler", bench_scheduler), ("vlm", bench_vlm),
+               ("distill", bench_distill), ("kernels", bench_kernels)]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,0", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Disaggregated Maestro runtime: sections on disjoint device groups.
+
+This is the paper-faithful execution mode: each section owns a device
+subset shaped by its C^s (``carve_meshes``), runs its own compiled step
+functions from a worker thread, and exchanges tensors through the
+:class:`MessageQueue` (§3.3) in the order produced by the wavefront
+scheduler (§3.4).
+
+On this CPU container the "devices" are virtual, but the dataflow,
+resharding, fanout and scheduling logic are exactly what a multi-controller
+deployment executes per pod slice — tests verify numerical equivalence with
+monolithic training.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.graph import SectionGraph
+from repro.core.messages import MessageQueue
+from repro.core.types import SectionConfig
+
+
+def carve_meshes(graph: SectionGraph, devices: Optional[Sequence] = None,
+                 *, gpu_counts: Optional[Dict[str, int]] = None
+                 ) -> Dict[str, Mesh]:
+    """Partition the device list into per-section meshes shaped (dp, tp).
+
+    gpu_counts overrides section.parallel.devices (e.g. from the planner)."""
+    devices = list(devices if devices is not None else jax.devices())
+    meshes: Dict[str, Mesh] = {}
+    off = 0
+    for name, sec in graph.sections.items():
+        n = (gpu_counts or {}).get(name, sec.parallel.devices)
+        assert off + n <= len(devices), (
+            f"need {off + n} devices, have {len(devices)}")
+        group = np.array(devices[off:off + n])
+        dp = sec.parallel.dp
+        tp = n // dp
+        meshes[name] = Mesh(group.reshape(dp, tp), ("data", "model"))
+        off += n
+    return meshes
+
+
+@dataclass
+class Task:
+    tag: str
+    fn: Callable
+    args: tuple
+
+
+class SectionWorker:
+    """One worker thread per section; executes tasks FIFO."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.inbox: "queue.Queue[Optional[Task]]" = queue.Queue()
+        self.results: "queue.Queue" = queue.Queue()
+        self.error: Optional[str] = None
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"section-{name}")
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            task = self.inbox.get()
+            if task is None:
+                return
+            try:
+                out = task.fn(*task.args)
+                self.results.put((task.tag, out))
+            except Exception:                      # pragma: no cover
+                self.error = traceback.format_exc()
+                self.results.put((task.tag, None))
+
+    def submit(self, tag: str, fn: Callable, *args) -> None:
+        self.inbox.put(Task(tag, fn, args))
+
+    def drain(self, n: int, timeout: float = 120.0) -> Dict[str, Any]:
+        out = {}
+        for _ in range(n):
+            tag, val = self.results.get(timeout=timeout)
+            if self.error:
+                raise RuntimeError(
+                    f"section {self.name} failed:\n{self.error}")
+            out[tag] = val
+        return out
+
+    def stop(self):
+        self.inbox.put(None)
+        self._thread.join(timeout=10)
+
+
+class MaestroRuntime:
+    """Wires sections, meshes, workers and the message queue together."""
+
+    def __init__(self, graph: SectionGraph,
+                 devices: Optional[Sequence] = None,
+                 gpu_counts: Optional[Dict[str, int]] = None):
+        graph.validate()
+        self.graph = graph
+        self.meshes = carve_meshes(graph, devices, gpu_counts=gpu_counts)
+        self.queue = MessageQueue()
+        self.workers = {name: SectionWorker(name) for name in graph.sections}
+
+    def mesh(self, section: str) -> Mesh:
+        return self.meshes[section]
+
+    def shutdown(self):
+        for w in self.workers.values():
+            w.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

@@ -1,0 +1,110 @@
+"""Deterministic synthetic data: token streams and mixed-modality batches.
+
+The multimodal generator reproduces the data regime the paper targets
+(§2.1/§4.1): a vision:text sample mix (Kimi-K2.5 uses 1:9, LongCat 1:2);
+text-only samples bypass the vision section entirely.  Each sample carries
+metadata (``has_image``, visual-token count) from which the cost model
+builds the scheduler 6-tuples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _lm_ngram_tokens(rng: np.random.Generator, batch: int, seq: int,
+                     vocab: int) -> np.ndarray:
+    """Markov-ish synthetic tokens so cross-entropy is *learnable* (loss
+    decreases in examples/tests): token t+1 = (a·t + b) mod vocab with
+    per-sequence (a, b) plus noise."""
+    a = rng.integers(1, 17, (batch, 1))
+    b = rng.integers(0, vocab, (batch, 1))
+    t0 = rng.integers(0, vocab, (batch, 1))
+    toks = [t0]
+    for _ in range(seq):
+        nxt = (a * toks[-1] + b) % vocab
+        flip = rng.random((batch, 1)) < 0.1
+        noise = rng.integers(0, vocab, (batch, 1))
+        toks.append(np.where(flip, noise, nxt))
+    arr = np.concatenate(toks, axis=1)
+    return arr
+
+
+def lm_batches(*, batch: int, seq_len: int, vocab: int, seed: int = 0
+               ) -> Iterator[Dict[str, jnp.ndarray]]:
+    rng = np.random.default_rng(seed)
+    while True:
+        toks = _lm_ngram_tokens(rng, batch, seq_len, vocab)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            "loss_mask": jnp.ones((batch, seq_len), jnp.float32),
+        }
+
+
+@dataclass
+class MultimodalSample:
+    has_image: bool
+    image_tokens: int          # visual tokens consumed by the LM
+    vit_patches: int           # raw patches the ViT section processes
+
+
+def sample_modalities(rng: np.random.Generator, n: int, *,
+                      vision_ratio: float, image_tokens: int,
+                      downsample: int = 4) -> List[MultimodalSample]:
+    out = []
+    for _ in range(n):
+        has = rng.random() < vision_ratio
+        out.append(MultimodalSample(
+            has, image_tokens if has else 0,
+            image_tokens * downsample if has else 0))
+    return out
+
+
+def vlm_batches(*, batch: int, seq_len: int, vocab: int, vision_ratio: float,
+                image_tokens: int, patch_dim: int, downsample: int = 4,
+                seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Mixed text/vision batches.
+
+    Emits LM inputs plus the ViT-section inputs (raw patches) and static-
+    capacity image slots (image_pos/image_valid) for the backbone."""
+    rng = np.random.default_rng(seed)
+    K = image_tokens
+    while True:
+        toks = _lm_ngram_tokens(rng, batch, seq_len, vocab)
+        modal = sample_modalities(rng, batch, vision_ratio=vision_ratio,
+                                  image_tokens=K, downsample=downsample)
+        has = np.array([m.has_image for m in modal])
+        patches = rng.standard_normal(
+            (batch, K * downsample, patch_dim)).astype(np.float32)
+        patches[~has] = 0.0
+        pos = np.tile(np.arange(K)[None], (batch, 1))  # images lead the seq
+        valid = np.tile(has[:, None], (1, K)).astype(np.int32)
+        mask = np.ones((batch, seq_len), np.float32)
+        mask[has, :K] = 0.0              # no LM loss on image positions
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            "loss_mask": jnp.asarray(mask),
+            "patches": jnp.asarray(patches, jnp.bfloat16),
+            "image_pos": jnp.asarray(pos, jnp.int32),
+            "image_valid": jnp.asarray(valid, jnp.int32),
+            "has_image": jnp.asarray(has.astype(np.int32)),
+        }
+
+
+def audio_batches(*, batch: int, seq_len: int, vocab: int, frames: int,
+                  frame_dim: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    while True:
+        toks = _lm_ngram_tokens(rng, batch, seq_len, vocab)
+        fr = rng.standard_normal((batch, frames, frame_dim))
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            "loss_mask": jnp.ones((batch, seq_len), jnp.float32),
+            "frames": jnp.asarray(fr, jnp.bfloat16),
+        }

@@ -1,0 +1,161 @@
+"""Chunked-vocab distillation KL — KL(p_teacher || p_student) from hidden states.
+
+Maestro §3.1: the logits tensor is vocab/hidden ≈ 62× larger than the hidden
+state it is computed from, so the teacher's output layer is colocated with the
+student and only hidden states cross the section boundary.  This kernel takes
+that insight to its conclusion: the KL is computed by streaming over vocab
+blocks with online-logsumexp accumulators, so the [N, V] logits of *neither*
+model are ever materialized in HBM.
+
+Per token (with z = h·W / T):
+
+    KL = Σ_v p_t (log p_t − log p_s)
+       = (Σ p_t z_t) − lse_t − (Σ p_t z_s) + lse_s
+
+All four accumulators stream in one pass.  The custom VJP recomputes per-block
+probabilities in a second pass (flash-style):
+
+    dKL/dz_s = p_s − p_t
+    dKL/dz_t = p_t ⊙ ((z_t − Σp_t z_t) − (z_s − Σp_t z_s))
+
+``distill_kl`` is the Pallas entry point; ``distill_kl_chunked_jnp`` is the
+chunked jnp implementation (used on CPU; oracle: ref.distill_kl_reference).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _blocks(V, block_v):
+    bv = min(block_v, V)
+    while V % bv:
+        bv //= 2
+    return max(bv, 1)
+
+
+def _fwd_pass(h_s, w_s, h_t, w_t, T, block_v):
+    """Returns per-token (lse_s, lse_t, e_t=Σp_t·z_t, e_s=Σp_t·z_s)."""
+    N = h_s.shape[0]
+    V = w_s.shape[1]
+    bv = _blocks(V, block_v)
+    nb = V // bv
+    hs = h_s.astype(jnp.float32)
+    ht = h_t.astype(jnp.float32)
+    ws = w_s.astype(jnp.float32).reshape(w_s.shape[0], nb, bv)
+    wt = w_t.astype(jnp.float32).reshape(w_t.shape[0], nb, bv)
+
+    def step(carry, inp):
+        ms, ls, mt, lt, ut, us = carry
+        wsb, wtb = inp
+        zs = (hs @ wsb) / T                          # [N, bv]
+        zt = (ht @ wtb) / T
+        ms_n = jnp.maximum(ms, jnp.max(zs, -1))
+        ls = ls * jnp.exp(ms - ms_n) + jnp.sum(jnp.exp(zs - ms_n[:, None]), -1)
+        mt_n = jnp.maximum(mt, jnp.max(zt, -1))
+        corr = jnp.exp(mt - mt_n)
+        pt_blk = jnp.exp(zt - mt_n[:, None])
+        lt = lt * corr + jnp.sum(pt_blk, -1)
+        ut = ut * corr + jnp.sum(pt_blk * zt, -1)
+        us = us * corr + jnp.sum(pt_blk * zs, -1)
+        return (ms_n, ls, mt_n, lt, ut, us), None
+
+    neg = jnp.full((N,), -1e30, jnp.float32)
+    zero = jnp.zeros((N,), jnp.float32)
+    (ms, ls, mt, lt, ut, us), _ = jax.lax.scan(
+        step, (neg, zero, neg, zero, zero, zero),
+        (ws.transpose(1, 0, 2), wt.transpose(1, 0, 2)))
+    lse_s = ms + jnp.log(ls)
+    lse_t = mt + jnp.log(lt)
+    e_t = ut / lt
+    e_s = us / lt
+    return lse_s, lse_t, e_t, e_s
+
+
+def _kl_from_stats(lse_s, lse_t, e_t, e_s, mask):
+    kl = e_t - lse_t - e_s + lse_s
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(kl * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(kl)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _distill_kl(h_s, w_s, h_t, w_t, mask, T, block_v):
+    lse_s, lse_t, e_t, e_s = _fwd_pass(h_s, w_s, h_t, w_t, T, block_v)
+    return _kl_from_stats(lse_s, lse_t, e_t, e_s, mask)
+
+
+def _distill_kl_fwd(h_s, w_s, h_t, w_t, mask, T, block_v):
+    lse_s, lse_t, e_t, e_s = _fwd_pass(h_s, w_s, h_t, w_t, T, block_v)
+    out = _kl_from_stats(lse_s, lse_t, e_t, e_s, mask)
+    return out, (h_s, w_s, h_t, w_t, mask, lse_s, lse_t, e_t, e_s)
+
+
+def _distill_kl_bwd(T, block_v, res, g):
+    h_s, w_s, h_t, w_t, mask, lse_s, lse_t, e_t, e_s = res
+    N = h_s.shape[0]
+    V = w_s.shape[1]
+    bv = _blocks(V, block_v)
+    nb = V // bv
+    hs = h_s.astype(jnp.float32)
+    ht = h_t.astype(jnp.float32)
+    ws = w_s.astype(jnp.float32).reshape(w_s.shape[0], nb, bv)
+    wt = w_t.astype(jnp.float32).reshape(w_t.shape[0], nb, bv)
+    if mask is not None:
+        tok_w = mask.astype(jnp.float32)
+        tok_w = tok_w / jnp.maximum(jnp.sum(tok_w), 1.0)
+    else:
+        tok_w = jnp.full((N,), 1.0 / N, jnp.float32)
+    tok_w = tok_w * g.astype(jnp.float32)
+
+    def step(carry, inp):
+        dhs, dht, i = carry
+        wsb, wtb = inp
+        zs = (hs @ wsb) / T
+        zt = (ht @ wtb) / T
+        ps = jnp.exp(zs - lse_s[:, None])
+        pt = jnp.exp(zt - lse_t[:, None])
+        dzs = (ps - pt) * tok_w[:, None] / T
+        dzt = pt * ((zt - e_t[:, None]) - (zs - e_s[:, None])) \
+            * tok_w[:, None] / T
+        dhs = dhs + dzs @ wsb.T
+        dht = dht + dzt @ wtb.T
+        dws_b = hs.T @ dzs
+        dwt_b = ht.T @ dzt
+        return (dhs, dht, i + 1), (dws_b, dwt_b)
+
+    dhs0 = jnp.zeros_like(hs)
+    dht0 = jnp.zeros_like(ht)
+    (dhs, dht, _), (dws_blocks, dwt_blocks) = jax.lax.scan(
+        step, (dhs0, dht0, 0),
+        (ws.transpose(1, 0, 2), wt.transpose(1, 0, 2)))
+    dws = dws_blocks.transpose(1, 0, 2).reshape(w_s.shape)
+    dwt = dwt_blocks.transpose(1, 0, 2).reshape(w_t.shape)
+    dmask = (None if mask is None
+             else np.zeros(mask.shape, jax.dtypes.float0))
+    return (dhs.astype(h_s.dtype), dws.astype(w_s.dtype),
+            dht.astype(h_t.dtype), dwt.astype(w_t.dtype), dmask)
+
+
+_distill_kl.defvjp(_distill_kl_fwd, _distill_kl_bwd)
+
+
+def distill_kl_chunked_jnp(h_student, w_student, h_teacher, w_teacher, *,
+                           mask=None, temperature: float = 1.0,
+                           block_v: int = 2048):
+    return _distill_kl(h_student, w_student, h_teacher, w_teacher, mask,
+                       float(temperature), int(block_v))
+
+
+def distill_kl(h_student, w_student, h_teacher, w_teacher, *, mask=None,
+               temperature: float = 1.0, interpret: bool = False,
+               block_v: int = 2048):
+    """Pallas entry point."""
+    from repro.kernels import distill_kl_pallas as dkp
+    return dkp.distill_kl_pallas(h_student, w_student, h_teacher, w_teacher,
+                                 mask=mask, temperature=temperature,
+                                 interpret=interpret, block_v=block_v)

@@ -1,0 +1,146 @@
+"""Chunked-vocab distillation KL as a Pallas TPU kernel.
+
+Grid: (token_blocks, vocab_blocks) with vocab innermost (sequential on
+TPU); six online accumulators (max/sumexp for both models + the two
+teacher-weighted sums) live in VMEM scratch and the per-token statistics
+are flushed at the last vocab step.  Neither model's [N, V] logits ever
+exist in HBM — the kernel-level form of Maestro §3.1's "ship hidden
+states, not logits".
+
+VMEM working set per step: two weight tiles [D, block_v] (the dominant
+term) + two hidden tiles [block_t, D] + the [block_t, block_v] logit tiles.
+With D=4096, block_v=512, block_t=256, bf16: ≈ 2·4MB + 2·2MB + 2·0.25MB
+≈ 12.5 MB — fits v5e VMEM headroom at double buffering.
+
+Backward: custom VJP reusing the analytic chunked backward from
+``distill_kl.py`` (dz_s = p_s − p_t etc.), which never materializes logits
+either.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import distill_kl as _dk
+
+NEG_INF = -1e30
+
+
+def _kernel(hs_ref, ws_ref, ht_ref, wt_ref,
+            lse_s_ref, lse_t_ref, e_t_ref, e_s_ref,
+            ms_ref, ls_ref, mt_ref, lt_ref, ut_ref, us_ref, *,
+            inv_temp, nv):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        mt_ref[...] = jnp.full_like(mt_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+        lt_ref[...] = jnp.zeros_like(lt_ref)
+        ut_ref[...] = jnp.zeros_like(ut_ref)
+        us_ref[...] = jnp.zeros_like(us_ref)
+
+    hs = hs_ref[...].astype(jnp.float32)
+    ht = ht_ref[...].astype(jnp.float32)
+    ws = ws_ref[...].astype(jnp.float32)
+    wt = wt_ref[...].astype(jnp.float32)
+    zs = jax.lax.dot_general(hs, ws, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * inv_temp
+    zt = jax.lax.dot_general(ht, wt, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * inv_temp
+
+    ms_new = jnp.maximum(ms_ref[:, 0], jnp.max(zs, axis=1))
+    ls_ref[:, 0] = (ls_ref[:, 0] * jnp.exp(ms_ref[:, 0] - ms_new)
+                    + jnp.sum(jnp.exp(zs - ms_new[:, None]), axis=1))
+    ms_ref[:, 0] = ms_new
+
+    mt_new = jnp.maximum(mt_ref[:, 0], jnp.max(zt, axis=1))
+    corr = jnp.exp(mt_ref[:, 0] - mt_new)
+    pt = jnp.exp(zt - mt_new[:, None])
+    lt_ref[:, 0] = lt_ref[:, 0] * corr + jnp.sum(pt, axis=1)
+    ut_ref[:, 0] = ut_ref[:, 0] * corr + jnp.sum(pt * zt, axis=1)
+    us_ref[:, 0] = us_ref[:, 0] * corr + jnp.sum(pt * zs, axis=1)
+    mt_ref[:, 0] = mt_new
+
+    @pl.when(iv == nv - 1)
+    def _finalize():
+        lse_s_ref[...] = ms_ref[:, 0] + jnp.log(
+            jnp.maximum(ls_ref[:, 0], 1e-30))
+        lse_t_ref[...] = mt_ref[:, 0] + jnp.log(
+            jnp.maximum(lt_ref[:, 0], 1e-30))
+        lt = jnp.maximum(lt_ref[:, 0], 1e-30)
+        e_t_ref[...] = ut_ref[:, 0] / lt
+        e_s_ref[...] = us_ref[:, 0] / lt
+
+
+def _stats_pallas(h_s, w_s, h_t, w_t, *, temperature, block_t, block_v,
+                  interpret):
+    N, Ds = h_s.shape
+    Dt = h_t.shape[1]
+    V = w_s.shape[1]
+    bt = min(block_t, N)
+    bv = min(block_v, V)
+    assert N % bt == 0 and V % bv == 0, (N, V, bt, bv)
+    grid = (N // bt, V // bv)
+    kernel = functools.partial(_kernel, inv_temp=1.0 / temperature,
+                               nv=V // bv)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, Ds), lambda it, iv: (it, 0)),
+            pl.BlockSpec((Ds, bv), lambda it, iv: (0, iv)),
+            pl.BlockSpec((bt, Dt), lambda it, iv: (it, 0)),
+            pl.BlockSpec((Dt, bv), lambda it, iv: (0, iv)),
+        ],
+        out_specs=[pl.BlockSpec((bt,), lambda it, iv: (it,))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.float32)] * 4,
+        scratch_shapes=[pltpu.VMEM((bt, 1), jnp.float32)] * 6,
+        interpret=interpret,
+    )(h_s, w_s, h_t, w_t)
+    return outs                                # lse_s, lse_t, e_t, e_s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _distill_kl_p(h_s, w_s, h_t, w_t, mask, T, block_t, block_v,
+                  interpret):
+    lse_s, lse_t, e_t, e_s = _stats_pallas(
+        h_s, w_s, h_t, w_t, temperature=T, block_t=block_t,
+        block_v=block_v, interpret=interpret)
+    return _dk._kl_from_stats(lse_s, lse_t, e_t, e_s, mask)
+
+
+def _fwd(h_s, w_s, h_t, w_t, mask, T, block_t, block_v, interpret):
+    lse_s, lse_t, e_t, e_s = _stats_pallas(
+        h_s, w_s, h_t, w_t, temperature=T, block_t=block_t,
+        block_v=block_v, interpret=interpret)
+    out = _dk._kl_from_stats(lse_s, lse_t, e_t, e_s, mask)
+    return out, (h_s, w_s, h_t, w_t, mask, lse_s, lse_t, e_t, e_s)
+
+
+def _bwd(T, block_t, block_v, interpret, res, g):
+    return _dk._distill_kl_bwd(T, block_v, res, g)
+
+
+_distill_kl_p.defvjp(_fwd, _bwd)
+
+
+def distill_kl_pallas(h_student, w_student, h_teacher, w_teacher, *,
+                      mask=None, temperature: float = 1.0,
+                      interpret: bool = False, block_t: int = 256,
+                      block_v: int = 512):
+    N, V = h_student.shape[0], w_student.shape[1]
+    bt = min(block_t, N)
+    bv = min(block_v, V)
+    if N % bt or V % bv:
+        return _dk.distill_kl_chunked_jnp(
+            h_student, w_student, h_teacher, w_teacher, mask=mask,
+            temperature=temperature, block_v=block_v)
+    return _distill_kl_p(h_student, w_student, h_teacher, w_teacher, mask,
+                         float(temperature), bt, bv, bool(interpret))

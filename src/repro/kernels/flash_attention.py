@@ -1,0 +1,201 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU-native layout (not a CUDA port): the MXU wants [≥128 × 128] matmul
+tiles, so blocks default to (block_q=512, block_kv=512) with head_dim as
+the minor dimension; online-softmax statistics live in VMEM scratch across
+the sequential innermost grid dimension (TPU grids execute in order, which
+replaces the CUDA warp-level loop).
+
+Grid: (batch, q_heads, nq, nkv) — the kv dimension is innermost; (m, l,
+acc) scratch carries across it and the output/LSE tiles are flushed at the
+final kv step.  GQA is expressed in the K/V index_map (kv_head = h // G) —
+no KV duplication in HBM or VMEM.  Causal/sliding-window masking is
+positional; fully-masked (above-diagonal) blocks skip their matmuls via
+``pl.when``.
+
+Backward: custom VJP over the blockwise-recompute backward in ``ref.py``
+(identical math to the FlashAttention-2 backward; on TPU it lowers to the
+same scan structure the forward uses).  Forward emits LSE for it.
+
+Validated in interpret mode on CPU against ``ref.mha_reference`` across a
+shape/dtype sweep (tests/test_kernels_flash.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _ref
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                acc_ref, m_ref, l_ref, *, scale, causal, window,
+                block_q, block_kv, nkv):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    kv_pos = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    run = True
+    if causal:
+        # skip blocks entirely above the diagonal
+        run = (ik * block_kv) <= (iq * block_q + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(
+            run, (iq * block_q) - (ik * block_kv + block_kv - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bkv, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= kv_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - kv_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(ik == nkv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[:, 0] + jnp.log(l)
+
+
+def _flash_fwd_pallas(q, k, v, *, scale, causal, window, block_q, block_kv,
+                      interpret):
+    """q [B,H,S,D]; k,v [B,KV,T,D] -> (o [B,H,S,D], lse [B,H,S])."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    assert S % bq == 0 and T % bkv == 0, (S, T, bq, bkv)
+    nq, nkv = S // bq, T // bkv
+    grid = (B, H, nq, nkv)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_kv=bkv, nkv=nkv)
+    out_shape = [
+        jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+    ]
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_pallas(q, k, v, causal, window, scale, blocks, interpret,
+                  out_dtype):
+    o, _ = _fwd(q, k, v, causal, window, scale, blocks, interpret,
+                out_dtype)
+    return o[0]
+
+
+def _fwd(q, k, v, causal, window, scale, blocks, interpret, out_dtype):
+    B, S, H, D = q.shape
+    qt = jnp.swapaxes(q, 1, 2)                  # [B,H,S,D]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o, lse = _flash_fwd_pallas(qt, kt, vt, scale=scale, causal=causal,
+                               window=window, block_q=blocks[0],
+                               block_kv=blocks[1], interpret=interpret)
+    o = jnp.swapaxes(o, 1, 2)                   # [B,S,H,D]
+    lse_bsh = jnp.transpose(lse, (0, 2, 1))     # [B,S,H]
+    return (o,), (q, k, v, o, lse_bsh)
+
+
+def _fwd_vjp(q, k, v, causal, window, scale, blocks, interpret, out_dtype):
+    (o,), res = _fwd(q, k, v, causal, window, scale, blocks, interpret,
+                     out_dtype)
+    return o, res
+
+
+def _bwd_vjp(causal, window, scale, blocks, interpret, out_dtype, res, do):
+    q, k, v, o, lse = res
+    # blockwise-recompute backward (ref.py) — the lse layout there is
+    # [B, S, H] with H = KV*G ordering identical to ours
+    dq, dk, dv, _, _, _ = _ref._flash_bwd(
+        causal, window, scale, blocks,
+        (q, k, v, o, lse, None, None, jnp.int32(0)), do)
+    return dq, dk, dv
+
+
+_flash_pallas.defvjp(_fwd_vjp, _bwd_vjp)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, segment_q=None,
+                    segment_kv=None, scale: Optional[float] = None,
+                    q_offset: int = 0, interpret: bool = False,
+                    block_q: int = 512, block_kv: int = 512):
+    """Pallas flash attention; q [B,S,H,D], k/v [B,T,KV,D].
+
+    Segment ids and nonzero q_offset fall back to the jnp blockwise path
+    (they appear only in packed-sequence and CP-sharded contexts where the
+    caller already composes its own kernel)."""
+    if segment_q is not None or segment_kv is not None or q_offset:
+        return _ref.flash_attention_jnp(
+            q, k, v, causal=causal, window=window, segment_q=segment_q,
+            segment_kv=segment_kv, scale=scale, q_offset=q_offset,
+            block_q=block_q, block_kv=block_kv)
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    if S % bq or T % bkv:
+        return _ref.flash_attention_jnp(
+            q, k, v, causal=causal, window=window, scale=scale,
+            block_q=block_q, block_kv=block_kv)
+    return _flash_pallas(q, k, v, bool(causal), int(window), float(scale),
+                         (bq, bkv), bool(interpret), q.dtype)

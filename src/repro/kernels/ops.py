@@ -1,0 +1,104 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+Each op picks an implementation:
+
+* ``pallas``           — the TPU kernel (``pl.pallas_call``).
+* ``pallas_interpret`` — same kernel body, interpret mode (CPU correctness).
+* ``ref``              — the memory-efficient jnp path (``ref.py``).
+* ``auto``             — pallas on TPU, ref elsewhere.
+
+The model stack always calls through here, so swapping in the TPU kernel is a
+config change, not a code change.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+@functools.lru_cache(None)
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:          # pragma: no cover
+        return False
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+# --------------------------------------------------------------------------- #
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    segment_q=None, segment_kv=None,
+                    scale: Optional[float] = None, q_offset: int = 0,
+                    impl: str = "auto",
+                    block_q: int = 512, block_kv: int = 512):
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window,
+            segment_q=segment_q, segment_kv=segment_kv, scale=scale,
+            q_offset=q_offset, interpret=(impl == "pallas_interpret"),
+            block_q=block_q, block_kv=block_kv)
+    if impl == "ref":
+        return ref.flash_attention_jnp(
+            q, k, v, causal=causal, window=window,
+            segment_q=segment_q, segment_kv=segment_kv, scale=scale,
+            q_offset=q_offset, block_q=block_q, block_kv=block_kv)
+    if impl == "ref_naive":
+        return ref.mha_reference(
+            q, k, v, causal=causal, window=window,
+            segment_q=segment_q, segment_kv=segment_kv, scale=scale,
+            q_offset=q_offset)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# --------------------------------------------------------------------------- #
+def distill_kl(h_student, w_student, h_teacher, w_teacher, *, mask=None,
+               temperature: float = 1.0, impl: str = "auto",
+               block_v: int = 2048):
+    """Chunked-vocab KL(p_t || p_s) from hidden states (never materializes
+    the [N, V] teacher logits — the kernel form of Maestro's §3.1 colocation
+    insight)."""
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import distill_kl as dk
+        return dk.distill_kl(h_student, w_student, h_teacher, w_teacher,
+                             mask=mask, temperature=temperature,
+                             interpret=(impl == "pallas_interpret"),
+                             block_v=block_v)
+    if impl == "ref":
+        from repro.kernels import distill_kl as dk
+        return dk.distill_kl_chunked_jnp(
+            h_student, w_student, h_teacher, w_teacher, mask=mask,
+            temperature=temperature, block_v=block_v)
+    if impl == "ref_naive":
+        return ref.distill_kl_reference(h_student, w_student, h_teacher,
+                                        w_teacher, mask=mask,
+                                        temperature=temperature)
+    raise ValueError(f"unknown distill_kl impl {impl!r}")
+
+
+# --------------------------------------------------------------------------- #
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128, impl: str = "auto"):
+    """Mamba2 SSD over a full sequence. See ref.ssd_reference for shapes."""
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ssd_scan as ssd
+        return ssd.ssd_scan(x, dt, A, B, C, D, chunk=chunk,
+                            interpret=(impl == "pallas_interpret"))
+    if impl == "ref":
+        from repro.kernels import ssd_scan as ssd
+        return ssd.ssd_chunked_jnp(x, dt, A, B, C, D, chunk=chunk)
+    if impl == "ref_naive":
+        return ref.ssd_reference(x, dt, A, B, C, D)
+    raise ValueError(f"unknown ssd impl {impl!r}")

@@ -1,0 +1,320 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Two tiers:
+
+* ``*_reference``  — naive, full-materialization math. Ground truth for tests.
+* ``flash_attention_jnp`` — blockwise online-softmax attention with a
+  custom VJP (flash-style recompute backward).  Memory-optimal in jnp; this is
+  what the model stack uses on CPU and what the Pallas kernel is checked
+  against on larger shapes.
+
+All attention shapes: q [B, S, H, D];  k, v [B, T, KV, D] with H % KV == 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _mask(sq, skv, q_pos, kv_pos, causal, window, seg_q, seg_kv):
+    """Boolean mask [*, sq, skv] — True = attend."""
+    m = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - kv_pos[None, :] < window
+    if seg_q is not None:
+        sm = seg_q[..., :, None] == seg_kv[..., None, :]
+        m = m & sm
+    return m
+
+
+def mha_reference(q, k, v, *, causal=True, window=0,
+                  segment_q=None, segment_kv=None,
+                  q_offset=0, scale: Optional[float] = None):
+    """Naive GQA attention. q_offset: absolute position of q[0] (for decode)."""
+    B, S, H, D = q.shape
+    _, T, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qr = q.reshape(B, S, KV, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S) + q_offset
+    kv_pos = jnp.arange(T)
+    m = _mask(S, T, q_pos, kv_pos, causal, window,
+              None if segment_q is None else segment_q[:, None, None, :],
+              None if segment_kv is None else segment_kv[:, None, None, :])
+    logits = jnp.where(m, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Blockwise flash attention in jnp with custom VJP
+# --------------------------------------------------------------------------- #
+def _block_mask(q_pos, kv_pos, causal, window, seg_q, seg_kv):
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - kv_pos[None, :] < window
+    out = m
+    if seg_q is not None:
+        # seg_q [B, sq], seg_kv [B, skv] -> [B, sq, skv]
+        out = out[None] & (seg_q[:, :, None] == seg_kv[:, None, :])
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def _flash(q, k, v, seg_q, seg_kv, q_offset, causal, window, scale,
+           blocks):
+    return _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, causal, window,
+                      scale, blocks)[0]
+
+
+def _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, causal, window, scale,
+               blocks):
+    block_q, block_kv = blocks
+    o, lse = _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window,
+                            scale, q_offset, block_q, block_kv)
+    return o, (q, k, v, o, lse, seg_q, seg_kv, q_offset)
+
+
+def _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window, scale, q_offset,
+                   block_q, block_kv):
+    B, S, H, D = q.shape
+    _, T, KV, _ = k.shape
+    G = H // KV
+    nq, nkv = S // block_q, T // block_kv
+    qr = (q.reshape(B, nq, block_q, KV, G, D).astype(jnp.float32) * scale)
+    kr = k.reshape(B, nkv, block_kv, KV, D).astype(jnp.float32)
+    vr = v.reshape(B, nkv, block_kv, KV, D).astype(jnp.float32)
+    sq_r = (seg_q.reshape(B, nq, block_q).transpose(1, 0, 2)
+            if seg_q is not None else jnp.zeros((nq, 1, 1), jnp.int32))
+    skv_r = (seg_kv.reshape(B, nkv, block_kv).transpose(1, 0, 2)
+             if seg_kv is not None else jnp.zeros((nkv, 1, 1), jnp.int32))
+
+    def q_block(carry, inp):
+        qi, q_blk, sq_blk = inp
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(acc, kin):
+            o_acc, m_acc, l_acc = acc
+            ki, k_blk, v_blk, skv_blk = kin
+            kv_pos = ki * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk)
+            msk = _block_mask(q_pos, kv_pos, causal, window,
+                              sq_blk if seg_q is not None else None,
+                              skv_blk if seg_kv is not None else None)
+            msk = msk[None, None, None] if msk.ndim == 2 else msk[:, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_acc, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_acc - m_new)
+            l_new = l_acc * corr + jnp.sum(p, axis=-1)
+            o_new = o_acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, v_blk)
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((B, KV, G, block_q, D), jnp.float32)
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0),
+            (jnp.arange(nkv), kr.transpose(1, 0, 2, 3, 4),
+             vr.transpose(1, 0, 2, 3, 4), skv_r))
+        l_safe = jnp.maximum(l, 1e-30)
+        o = o / l_safe[..., None]
+        lse = m + jnp.log(l_safe)
+        return carry, (o, lse)
+
+    _, (o_all, lse_all) = jax.lax.scan(
+        q_block, None,
+        (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5), sq_r))
+    o = o_all.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D).astype(q.dtype)
+    lse = lse_all.transpose(1, 0, 4, 2, 3).reshape(B, S, H)
+    return o, lse
+
+
+def _flash_bwd(causal, window, scale, blocks, res, do):
+    q, k, v, o, lse, seg_q, seg_kv, q_offset = res
+    block_q, block_kv = blocks
+    B, S, H, D = q.shape
+    _, T, KV, _ = k.shape
+    G = H // KV
+    nq, nkv = S // block_q, T // block_kv
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    of = o.astype(jnp.float32)
+    # delta [B,S,H]
+    delta = jnp.sum(dof * of, axis=-1)
+
+    qr = qf.reshape(B, nq, block_q, KV, G, D)
+    dor = dof.reshape(B, nq, block_q, KV, G, D)
+    lser = lse.reshape(B, nq, block_q, KV, G)
+    dltr = delta.reshape(B, nq, block_q, KV, G)
+    kr = kf.reshape(B, nkv, block_kv, KV, D)
+    vr = vf.reshape(B, nkv, block_kv, KV, D)
+    sq_r = (seg_q.reshape(B, nq, block_q).transpose(1, 0, 2)
+            if seg_q is not None else jnp.zeros((nq, 1, 1), jnp.int32))
+    skv_r = (seg_kv.reshape(B, nkv, block_kv).transpose(1, 0, 2)
+             if seg_kv is not None else jnp.zeros((nkv, 1, 1), jnp.int32))
+
+    dk0 = jnp.zeros((nkv, B, block_kv, KV, D), jnp.float32)
+    dv0 = jnp.zeros((nkv, B, block_kv, KV, D), jnp.float32)
+
+    # Outer scan over q blocks carries full dk/dv accumulators; the inner scan
+    # over kv blocks emits per-(q,kv)-block dk/dv contributions.
+    def outer2(carry, qin):
+        dk_acc, dv_acc = carry
+        qi, q_blk, do_blk, lse_blk, dlt_blk, sq_blk = qin
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def inner(dq_acc, kin):
+            ki, k_blk, v_blk, skv_blk = kin
+            kv_pos = ki * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk * scale, k_blk)
+            msk = _block_mask(q_pos, kv_pos, causal, window,
+                              sq_blk if seg_q is not None else None,
+                              skv_blk if seg_kv is not None else None)
+            msk = (msk[None, None, None] if msk.ndim == 2
+                   else msk[:, None, None])
+            s = jnp.where(msk, s, NEG_INF)
+            p = jnp.exp(s - lse_blk.transpose(0, 2, 3, 1)[..., None])
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", do_blk, v_blk)
+            ds = p * (dp - dlt_blk.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bkgqt,btkd->bqkgd", ds, k_blk)
+            dk_b = jnp.einsum("bkgqt,bqkgd->btkd", ds, q_blk)
+            dv_b = jnp.einsum("bkgqt,bqkgd->btkd", p, do_blk)
+            return dq_acc, (dk_b, dv_b)
+
+        dq0 = jnp.zeros((B, block_q, KV, G, D), jnp.float32)
+        dq, (dk_b, dv_b) = jax.lax.scan(
+            inner, dq0,
+            (jnp.arange(nkv), kr.transpose(1, 0, 2, 3, 4),
+             vr.transpose(1, 0, 2, 3, 4), skv_r))
+        return (dk_acc + dk_b, dv_acc + dv_b), dq
+
+    (dk_all, dv_all), dq_all = jax.lax.scan(
+        outer2, (dk0, dv0),
+        (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5),
+         dor.transpose(1, 0, 2, 3, 4, 5),
+         lser.transpose(1, 0, 2, 3, 4), dltr.transpose(1, 0, 2, 3, 4), sq_r))
+    dq = dq_all.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D).astype(q.dtype)
+    dk = dk_all.transpose(1, 0, 2, 3, 4).reshape(B, T, KV, D).astype(k.dtype)
+    dv = dv_all.transpose(1, 0, 2, 3, 4).reshape(B, T, KV, D).astype(v.dtype)
+
+    def zgrad(x):
+        if x is None:
+            return None
+        shape = getattr(x, "shape", ())
+        return np.zeros(shape, jax.dtypes.float0)
+
+    return dq, dk, dv, zgrad(seg_q), zgrad(seg_kv), zgrad(q_offset)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_jnp(q, k, v, *, causal=True, window=0,
+                        segment_q=None, segment_kv=None,
+                        scale: Optional[float] = None, q_offset=0,
+                        block_q=512, block_kv=512):
+    """Blockwise flash attention (jnp, custom-VJP recompute backward).
+
+    Sequences that don't divide the block size are padded up to the next
+    block multiple (padded KV excluded via segment ids; padded Q rows
+    sliced off) instead of shrinking the block — tiny blocks on odd
+    lengths (e.g. whisper's 1500 frames) would explode the scan trip
+    count."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    pad_q = (-S) % bq
+    pad_kv = (-T) % bkv
+    if pad_q or pad_kv:
+        sq = (segment_q if segment_q is not None
+              else jnp.zeros((B, S), jnp.int32))
+        skv = (segment_kv if segment_kv is not None
+               else jnp.zeros((B, T), jnp.int32))
+        segment_q = jnp.pad(sq, ((0, 0), (0, pad_q)), constant_values=-1)
+        segment_kv = jnp.pad(skv, ((0, 0), (0, pad_kv)), constant_values=-2)
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    out = _flash(q, k, v, segment_q, segment_kv, q_off, bool(causal),
+                 int(window), float(scale), (bq, bkv))
+    if pad_q:
+        out = out[:, :S]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Chunked-vocab distillation KL oracle (see kernels/distill_kl.py)
+# --------------------------------------------------------------------------- #
+def distill_kl_reference(h_student, w_student, h_teacher, w_teacher,
+                         *, mask=None, temperature: float = 1.0):
+    """KL(p_teacher || p_student), token-mean, from hidden states.
+
+    h_* : [N, D_*];  w_* : [D_*, V].  Full-materialization oracle.
+    """
+    zs = (h_student.astype(jnp.float32) @ w_student.astype(jnp.float32))
+    zt = (h_teacher.astype(jnp.float32) @ w_teacher.astype(jnp.float32))
+    zs, zt = zs / temperature, zt / temperature
+    ls = jax.nn.log_softmax(zs, axis=-1)
+    lt = jax.nn.log_softmax(zt, axis=-1)
+    pt = jnp.exp(lt)
+    kl = jnp.sum(pt * (lt - ls), axis=-1)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(kl * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(kl)
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 / SSD oracle: sequential recurrence (ground truth)
+# --------------------------------------------------------------------------- #
+def ssd_reference(x, dt, A, B, C, D):
+    """Sequential SSD scan.
+
+    x  [b, s, h, p]   inputs per head
+    dt [b, s, h]      softplus-ed timestep
+    A  [h]            negative decay rate (A < 0 stored as value, decay=exp(A*dt))
+    B  [b, s, n]      input projection (ngroups=1)
+    C  [b, s, n]      output projection
+    D  [h]            skip
+    returns y [b, s, h, p]
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                       # [b,h,p],[b,h],[b,n],[b,n]
+        decay = jnp.exp(A[None] * dtt)              # [b,h]
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        state = state * decay[..., None, None] + dBx
+        yt = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, yt
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0,
+                         (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+                          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3) + xf * D[None, None, :, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,107 @@
+"""Mamba-2 SSD (state-space duality) scan — chunked formulation.
+
+The chunked algorithm (Mamba-2 paper, arXiv:2405.21060 §6) splits the sequence
+into chunks of length Q:
+
+* intra-chunk: quadratic "attention-like" term  (C_i·B_j)·exp(cum_i − cum_j)
+* chunk state: S_c = Σ_j exp(cum_Q − cum_j)·dt_j·B_j⊗x_j
+* inter-chunk: a length-S/Q recurrence over chunk states
+* output:      y = y_intra + C_i·(exp(cum_i)·H_{c−1}) + D·x
+
+``ssd_chunked_jnp`` is the jnp implementation used by the model stack (and
+the oracle target of the Pallas kernel, which computes the intra-chunk +
+state terms per chunk with VMEM-resident blocks).
+
+Shapes: x [b,s,h,p], dt [b,s,h], A [h], B [b,s,n], C [b,s,n], D [h].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _chunk_terms(xc, dtc, A, Bc, Cc):
+    """Per-chunk intra output, final-state contribution, and total decay.
+
+    xc [b,Q,h,p], dtc [b,Q,h], Bc/Cc [b,Q,n] -> (y_intra, S_c, decay_chunk,
+    cum) with S_c [b,h,p,n], decay_chunk [b,h], cum [b,Q,h].
+    """
+    a = A[None, None, :] * dtc                       # [b,Q,h] log-decays
+    cum = jnp.cumsum(a, axis=1)                      # [b,Q,h]
+    # L[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, None, :] - cum[:, None, :, :]   # [b,Q,Q,h]
+    Q = xc.shape[1]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bin,bjn->bij", Cc, Bc)          # [b,Q,Q]
+    scores = cb[:, :, :, None] * L                   # [b,Q,Q,h]
+    dx = dtc[..., None] * xc                         # [b,Q,h,p]
+    y_intra = jnp.einsum("bijh,bjhp->bihp", scores, dx)
+    # state contribution: S_c[h,p,n] = sum_j exp(cum_Q - cum_j) dt_j x_j B_j
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)     # [b,Q,h]
+    S_c = jnp.einsum("bjh,bjhp,bjn->bhpn", decay_to_end * dtc, xc, Bc)
+    decay_chunk = jnp.exp(cum[:, -1, :])             # [b,h]
+    return y_intra, S_c, decay_chunk, cum
+
+
+def ssd_chunked_jnp(x, dt, A, B, C, D, *, chunk: int = 128,
+                    initial_state=None, return_state: bool = False):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    while s % Q:
+        Q //= 2
+    nc = s // Q
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, Q, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, Q, n)
+    Af = A.astype(jnp.float32)
+
+    def step(Hprev, inp):
+        xc, dtc, Bc, Cc = inp
+        y_intra, S_c, decay_chunk, cum = _chunk_terms(xc, dtc, Af, Bc, Cc)
+        # inter-chunk: y_inter[i] = C_i · (exp(cum_i) * Hprev)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cc, Hprev,
+                             jnp.exp(cum))
+        Hnew = Hprev * decay_chunk[:, :, None, None] + S_c
+        return Hnew, y_intra + y_inter
+
+    H0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    Hfin, ys = jax.lax.scan(
+        step, H0,
+        (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+         Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, Hfin
+    return y
+
+
+def ssd_decode_step(state, xt, dtt, A, Bt, Ct, D):
+    """Single-token SSD recurrence.
+
+    state [b,h,p,n], xt [b,h,p], dtt [b,h], Bt/Ct [b,n] -> (state', y [b,h,p])
+    """
+    decay = jnp.exp(A[None] * dtt.astype(jnp.float32))
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+                     Bt.astype(jnp.float32), xt.astype(jnp.float32))
+    state = state * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, Ct.astype(jnp.float32))
+    y = y + xt.astype(jnp.float32) * D[None, :, None]
+    return state, y.astype(xt.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 128, interpret: bool = False):
+    """Pallas entry point (see bottom of file); falls back to chunked jnp
+    until the kernel is wired for the requested shape."""
+    from repro.kernels import ssd_pallas
+    return ssd_pallas.ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                                      interpret=interpret)

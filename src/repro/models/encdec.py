@@ -1,0 +1,164 @@
+"""Whisper-style encoder–decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs()``
+delivers precomputed frame embeddings [B, F, frontend_dim].  The backbone is
+12 bidirectional encoder layers + 12 decoder layers (causal self-attention +
+cross-attention + GELU MLP).  Positional scheme: RoPE on self-attention
+(deviation from Whisper's learned absolute embeddings — noted in DESIGN.md);
+cross-attention is position-free as in the original.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import attention as att
+from repro.models import common as cm
+from repro.models import mlp as mlpm
+from repro.models.common import ParamSpec
+from repro.models.transformer import apply_norm, norm_specs, unembed
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> dict:
+    return {"norm1": norm_specs(cfg), "attn": att.attn_specs(cfg),
+            "norm2": norm_specs(cfg), "mlp": mlpm.mlp_specs(cfg)}
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> dict:
+    return {"norm1": norm_specs(cfg), "self_attn": att.attn_specs(cfg),
+            "norm_c": norm_specs(cfg), "cross_attn": att.attn_specs(cfg),
+            "norm2": norm_specs(cfg), "mlp": mlpm.mlp_specs(cfg)}
+
+
+def encdec_specs(cfg: ArchConfig) -> dict:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "frontend_proj": ParamSpec((cfg.frontend_dim, cfg.d_model),
+                                   ("frames_dim", "embed"), "normal",
+                                   dt, (0,)),
+        "enc_layers": cm.stack_specs(_enc_layer_specs(cfg),
+                                     cfg.encoder_layers),
+        "enc_norm": norm_specs(cfg),
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed"), "embed", dt),
+        "dec_layers": cm.stack_specs(_dec_layer_specs(cfg), cfg.num_layers),
+        "final_norm": norm_specs(cfg),
+        "unembed": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                             ("embed", "vocab"), "normal", dt, (0,)),
+    }
+
+
+def encode(p, cfg: ArchConfig, frames, *, impl: str = "auto",
+           remat: bool = True):
+    x = jnp.einsum("bfe,ed->bfd",
+                   frames.astype(p["frontend_proj"].dtype),
+                   p["frontend_proj"])
+
+    def body(x, lp):
+        def fn(lp, x):
+            h = apply_norm(lp["norm1"], x, cfg)
+            h = att.attention(lp["attn"], h, cfg, causal=False, impl=impl)
+            x = x + h
+            h = apply_norm(lp["norm2"], x, cfg)
+            return x + mlpm.mlp(lp["mlp"], h, cfg)
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, p["enc_layers"])
+    return apply_norm(p["enc_norm"], x, cfg)
+
+
+def _cross_kv(lp, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wv"])
+    return k, v
+
+
+def decode_train(p, cfg: ArchConfig, tokens, enc_out, *, impl="auto",
+                 remat: bool = True):
+    x = jnp.take(p["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        def fn(lp, x):
+            h = apply_norm(lp["norm1"], x, cfg)
+            h = att.attention(lp["self_attn"], h, cfg, causal=True,
+                              impl=impl)
+            x = x + h
+            h = apply_norm(lp["norm_c"], x, cfg)
+            kv = _cross_kv(lp, enc_out)
+            h = att.attention(lp["cross_attn"], h, cfg, causal=False,
+                              kv_override=kv, rope=False, impl=impl)
+            x = x + h
+            h = apply_norm(lp["norm2"], x, cfg)
+            return x + mlpm.mlp(lp["mlp"], h, cfg)
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, p["dec_layers"])
+    return apply_norm(p["final_norm"], x, cfg)
+
+
+def encdec_loss(p, cfg: ArchConfig, batch, *, impl="auto", remat=True):
+    enc_out = encode(p, cfg, batch["frames"], impl=impl, remat=remat)
+    x = decode_train(p, cfg, batch["tokens"], enc_out, impl=impl,
+                     remat=remat)
+    logits = unembed(p, cfg, x)
+    ce = cm.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def encdec_prefill(p, cfg: ArchConfig, batch, *, impl="auto", remat=True,
+                   extra_cache: int = 0):
+    """Returns (last logits [B, V], cache). Cache per layer: self KV +
+    precomputed cross KV."""
+    enc_out = encode(p, cfg, batch["frames"], impl=impl, remat=remat)
+    tokens = batch["tokens"]
+    S = tokens.shape[1] + extra_cache
+    x = jnp.take(p["embed"], tokens, axis=0)
+
+    def body(x, lp):
+        h = apply_norm(lp["norm1"], x, cfg)
+        h, self_cache = att.attention_prefill(lp["self_attn"], h, cfg,
+                                              cache_len=S, impl=impl)
+        x = x + h
+        h = apply_norm(lp["norm_c"], x, cfg)
+        ck, cv = _cross_kv(lp, enc_out)
+        h = att.attention(lp["cross_attn"], h, cfg, causal=False,
+                          kv_override=(ck, cv), rope=False, impl=impl)
+        x = x + h
+        h = apply_norm(lp["norm2"], x, cfg)
+        x = x + mlpm.mlp(lp["mlp"], h, cfg)
+        return x, {"self": self_cache, "cross": {"k": ck, "v": cv}}
+
+    x, cache = jax.lax.scan(body, x, p["dec_layers"])
+    x = apply_norm(p["final_norm"], x, cfg)
+    return unembed(p, cfg, x[:, -1:])[:, 0], cache
+
+
+def encdec_decode(p, cfg: ArchConfig, cache, token, pos):
+    x = jnp.take(p["embed"], token, axis=0)
+
+    def body(x, inp):
+        lp, lcache = inp
+        h = apply_norm(lp["norm1"], x, cfg)
+        h, nc = att.attention_decode(lp["self_attn"], h, lcache["self"],
+                                     cfg, pos=pos)
+        x = x + h
+        h = apply_norm(lp["norm_c"], x, cfg)
+        h = att.attention_decode(lp["cross_attn"], h, None, cfg, pos=pos,
+                                 kv_override=(lcache["cross"]["k"],
+                                              lcache["cross"]["v"]))
+        x = x + h
+        h = apply_norm(lp["norm2"], x, cfg)
+        x = x + mlpm.mlp(lp["mlp"], h, cfg)
+        return x, {"self": nc, "cross": lcache["cross"]}
+
+    x, new_cache = jax.lax.scan(body, x, (p["dec_layers"], cache))
+    x = apply_norm(p["final_norm"], x, cfg)
+    return unembed(p, cfg, x)[:, 0], new_cache

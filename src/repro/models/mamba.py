@@ -1,0 +1,140 @@
+"""Mamba-2 block (SSD) with chunked-scan training and recurrent decode.
+
+Layout follows the Mamba-2 reference: a single input projection produces
+(z, x, B, C, dt); (x, B, C) go through a short depthwise causal conv; the SSD
+scan runs per head; the output is gated by silu(z), RMS-normed, projected.
+
+Decode cache per layer: ``{"conv": [B, conv_w-1, d_conv_ch],
+"ssm": [B, nheads, headdim, n]}``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.kernels import ops as kops
+from repro.kernels.ssd_scan import ssd_decode_step
+from repro.models import common as cm
+from repro.models.common import ParamSpec
+
+
+def dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_headdim
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * n
+    return d_in, nheads, n, conv_ch
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, nheads, n, conv_ch = dims(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * n + nheads),
+                             ("embed", "d_inner"), "normal", dt, (0,)),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", "d_inner"),
+                            "normal", dt, (0,)),
+        "conv_b": ParamSpec((conv_ch,), ("d_inner",), "zeros", dt),
+        "A_log": ParamSpec((nheads,), ("ssm_heads",), "zeros", jnp.float32),
+        "D": ParamSpec((nheads,), ("ssm_heads",), "ones", jnp.float32),
+        "dt_bias": ParamSpec((nheads,), ("ssm_heads",), "zeros", jnp.float32),
+        "norm": ParamSpec((d_in,), ("d_inner",), "ones", jnp.float32),
+        "out_proj": ParamSpec((d_in, d), ("d_inner", "embed"),
+                              "normal", dt, (0,)),
+    }
+
+
+def _split(zxbcdt, cfg: ArchConfig):
+    d_in, nheads, n, _ = dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt_raw = zxbcdt[..., d_in + d_in + 2 * n:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC, w, b, prev=None):
+    """Depthwise causal conv along seq. xBC [B,S,Ch]; w [W,Ch].
+
+    prev: optional [B, W-1, Ch] left-context (for chunked prefill); returns
+    (out [B,S,Ch], new_state [B, W-1, Ch]).
+    """
+    W = w.shape[0]
+    Bsz = xBC.shape[0]
+    if prev is None:
+        prev = jnp.zeros((Bsz, W - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(W))
+    out = out + b
+    new_state = xp[:, xp.shape[1] - (W - 1):]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def mamba(p, x, cfg: ArchConfig, *, cache=None, return_cache: bool = False,
+          impl: str = "auto"):
+    """Full-sequence Mamba-2. x: [B,S,D]."""
+    B, S, _ = x.shape
+    d_in, nheads, n, conv_ch = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt_raw = _split(zxbcdt, cfg)
+    conv_prev = cache["conv"] if cache is not None else None
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_prev)
+    xs = xBC[..., :d_in].reshape(B, S, nheads, cfg.ssm_headdim)
+    Bm = xBC[..., d_in:d_in + n]
+    Cm = xBC[..., d_in + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    init_state = cache["ssm"] if cache is not None else None
+    if return_cache:
+        from repro.kernels.ssd_scan import ssd_chunked_jnp
+        y, state = ssd_chunked_jnp(xs, dt, A, Bm, Cm, p["D"],
+                                   initial_state=init_state,
+                                   return_state=True)
+    else:
+        y = kops.ssd_scan(xs, dt, A, Bm, Cm, p["D"], impl=impl)
+        state = None
+    y = y.reshape(B, S, d_in)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                    p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_cache:
+        return out, {"conv": conv_state, "ssm": state}
+    return out
+
+
+def mamba_decode(p, x, cache, cfg: ArchConfig):
+    """One-token decode. x: [B,1,D]; cache {'conv','ssm'}."""
+    B = x.shape[0]
+    d_in, nheads, n, conv_ch = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt_raw = _split(zxbcdt, cfg)
+    # conv over stored window + current input
+    W = cfg.ssm_conv
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)   # [B,W,Ch]
+    out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC1 = jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)[:, None]
+    new_conv = window[:, 1:]
+    xt = xBC1[:, 0, :d_in].reshape(B, nheads, cfg.ssm_headdim)
+    Bt = xBC1[:, 0, d_in:d_in + n]
+    Ct = xBC1[:, 0, d_in + n:]
+    dtt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    state, y = ssd_decode_step(cache["ssm"], xt, dtt, A, Bt, Ct, p["D"])
+    y = y.reshape(B, 1, d_in)
+    y = cm.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                    p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": state}
+
+
+def cache_spec(cfg: ArchConfig, batch: int):
+    d_in, nheads, n, conv_ch = dims(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), dt),
+        "ssm": jax.ShapeDtypeStruct((batch, nheads, cfg.ssm_headdim, n),
+                                    jnp.float32),
+    }

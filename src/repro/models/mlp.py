@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models.common import ParamSpec
+
+
+def mlp_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.mlp_act == "gelu":
+        return {
+            "w_in": ParamSpec((d, f), ("embed", "mlp"), "normal", dt, (0,)),
+            "b_in": ParamSpec((f,), ("mlp",), "zeros", dt),
+            "w_out": ParamSpec((f, d), ("mlp", "embed"), "normal", dt, (0,)),
+            "b_out": ParamSpec((d,), ("embed_nosplit",), "zeros", dt),
+        }
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp"), "normal", dt, (0,)),
+        "w_up": ParamSpec((d, f), ("embed", "mlp"), "normal", dt, (0,)),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), "normal", dt, (0,)),
+    }
+
+
+def mlp(p, x, cfg: ArchConfig) -> jnp.ndarray:
+    from repro.models.common import grad_dtype_barrier as gdb
+    if cfg.mlp_act == "gelu":
+        h = gdb(jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        return jnp.einsum("bsf,fd->bsd", h, p["w_out"]) + p["b_out"]
+    g = gdb(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,175 @@
+"""Model factory: one uniform API over every architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` with
+
+* ``specs()``               — ParamSpec tree (single source of truth)
+* ``init(rng)``             — materialized params
+* ``loss(params, batch)``   — training forward (scalar loss, metrics)
+* ``prefill(params, batch)``— (last logits, cache)
+* ``decode(params, cache, token, pos)`` — one serving step
+* ``input_specs(shape)``    — ShapeDtypeStruct stand-ins for every input of
+  the given :class:`ShapeConfig` cell (the dry-run contract)
+* ``cache_specs(shape)``    — ShapeDtypeStruct tree of the decode cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig, ShapeConfig
+from repro.models import common as cm
+from repro.models import encdec as ed
+from repro.models import mamba as mb
+from repro.models import transformer as tf
+from repro.models.attention import attn_specs  # noqa: F401 (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    _specs: Any
+    loss: Callable
+    prefill: Optional[Callable]
+    decode: Optional[Callable]
+    forward: Callable
+
+    def specs(self):
+        return self._specs
+
+    def init(self, rng):
+        return cm.init_params(self._specs, rng)
+
+    def param_shapes(self):
+        return cm.param_shapes(self._specs)
+
+    # ------------------------------------------------------------------ #
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        return input_specs(self.cfg, shape)
+
+    def cache_specs(self, shape: ShapeConfig):
+        return cache_specs(self.cfg, shape)
+
+
+def _img_tokens(cfg: ArchConfig, seq_len: int) -> int:
+    """Static image-token capacity per sample for VLM archs."""
+    if not cfg.vision_dim:
+        return 0
+    cap = cfg.max_image_tokens or min(seq_len // 4, 2048)
+    return min(cap, seq_len)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every model input of this (arch × shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+    batch: dict = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        batch["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_frames, cfg.frontend_dim), jnp.bfloat16)
+    if cfg.vision_dim:
+        K = _img_tokens(cfg, S)
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, K, cfg.vision_dim), jnp.bfloat16)
+        batch["image_pos"] = jax.ShapeDtypeStruct((B, K), i32)
+        batch["image_valid"] = jax.ShapeDtypeStruct((B, K), i32)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Decode-cache ShapeDtypeStruct tree for a decode cell: a cache holding
+    ``seq_len`` context (rolling window for SWA archs)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16
+    clen = tf.kv_cache_len(cfg, S)
+    kv = cfg.num_kv_heads
+    hd = cfg.hd if cfg.num_heads else 0
+
+    def attn_cache():
+        return {"k": jax.ShapeDtypeStruct((B, clen, kv, hd), dt),
+                "v": jax.ShapeDtypeStruct((B, clen, kv, hd), dt)}
+
+    if cfg.family == "audio":
+        F = cfg.frontend_frames
+        self_c = {"k": jax.ShapeDtypeStruct((B, clen, kv, hd), dt),
+                  "v": jax.ShapeDtypeStruct((B, clen, kv, hd), dt)}
+        cross_c = {"k": jax.ShapeDtypeStruct((B, F, kv, hd), dt),
+                   "v": jax.ShapeDtypeStruct((B, F, kv, hd), dt)}
+        layer = {"self": self_c, "cross": cross_c}
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape,
+                                           s.dtype), layer)
+
+    pk, reps = tf.group_layout(cfg)
+    period = {}
+    for j, (mixer, ffn) in enumerate(pk):
+        period[f"sub{j}"] = (attn_cache() if mixer == "attn"
+                             else mb.cache_spec(cfg, B))
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((reps,) + s.shape, s.dtype), period)
+
+
+# --------------------------------------------------------------------------- #
+def build_model(cfg: ArchConfig, *, impl: str = "auto",
+                remat: bool = True) -> Model:
+    if cfg.family == "audio":
+        specs = ed.encdec_specs(cfg)
+
+        def loss(p, batch):
+            return ed.encdec_loss(p, cfg, batch, impl=impl, remat=remat)
+
+        def forward(p, batch):
+            enc = ed.encode(p, cfg, batch["frames"], impl=impl, remat=remat)
+            x = ed.decode_train(p, cfg, batch["tokens"], enc, impl=impl,
+                                remat=remat)
+            return tf.unembed(p, cfg, x)
+
+        def prefill(p, batch, extra_cache=0):
+            return ed.encdec_prefill(p, cfg, batch, impl=impl, remat=remat,
+                                     extra_cache=extra_cache)
+
+        def decode(p, cache, token, pos):
+            return ed.encdec_decode(p, cfg, cache, token, pos)
+
+        return Model(cfg, specs, loss, prefill, decode, forward)
+
+    if cfg.family == "vit":
+        specs = tf.lm_specs(cfg)
+
+        def loss(p, batch):          # encoder-only: masked-emb regression
+            logits, aux = tf.lm_forward(p, cfg, batch, causal=False,
+                                        impl=impl, remat=remat)
+            ce = cm.cross_entropy(logits, batch["labels"],
+                                  batch.get("loss_mask"))
+            return ce, {"ce": ce, "aux": aux}
+
+        def forward(p, batch):
+            return tf.lm_forward(p, cfg, batch, causal=False, impl=impl,
+                                 remat=remat)[0]
+
+        return Model(cfg, specs, loss, None, None, forward)
+
+    specs = tf.lm_specs(cfg)
+
+    def loss(p, batch):
+        return tf.lm_loss(p, cfg, batch, impl=impl, remat=remat)
+
+    def forward(p, batch):
+        return tf.lm_forward(p, cfg, batch, impl=impl, remat=remat)[0]
+
+    def prefill(p, batch, extra_cache=0):
+        return tf.lm_prefill(p, cfg, batch, impl=impl, remat=remat,
+                             extra_cache=extra_cache)
+
+    def decode(p, cache, token, pos):
+        return tf.lm_decode(p, cfg, cache, token, pos)
+
+    return Model(cfg, specs, loss, prefill, decode, forward)

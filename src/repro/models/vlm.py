@@ -1,0 +1,85 @@
+"""ViT encoder section for compound VLM workloads (paper §2.1/§4.1).
+
+The assigned ``pixtral-12b`` arch stubs its frontend (the backbone consumes
+precomputed patch embeddings — see ``transformer.embed_tokens``).  This
+module is the *compound-workload* ViT: a real bidirectional transformer over
+patch embeddings that forms its own Maestro section with a CP-heavy
+parallelism config, followed by the 4:1 sequence downsampling the paper
+describes (Qwen3-VL style) and a projection into the LM's embedding space.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import attention as att
+from repro.models import common as cm
+from repro.models import mlp as mlpm
+from repro.models.common import ParamSpec
+from repro.models.transformer import apply_norm, norm_specs
+
+
+def vit_config(*, num_layers=24, d_model=1024, num_heads=16, d_ff=4096,
+               patch_dim=768, downsample=4, out_dim=4096,
+               name="vit-encoder") -> ArchConfig:
+    return ArchConfig(
+        name=name, family="vit", num_layers=num_layers, d_model=d_model,
+        num_heads=num_heads, num_kv_heads=num_heads, d_ff=d_ff,
+        vocab_size=0, head_dim=d_model // num_heads,
+        frontend_dim=patch_dim, vision_dim=out_dim,
+        # reuse fields: frontend_dim = raw patch dim; vision_dim = LM d_model
+        moe_offset=downsample,   # stash the downsample factor
+    )
+
+
+def downsample_factor(cfg: ArchConfig) -> int:
+    return cfg.moe_offset or 4
+
+
+def vit_specs(cfg: ArchConfig) -> dict:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    layer = {"norm1": norm_specs(cfg), "attn": att.attn_specs(cfg),
+             "norm2": norm_specs(cfg), "mlp": mlpm.mlp_specs(cfg)}
+    ds = downsample_factor(cfg)
+    return {
+        "patch_proj": ParamSpec((cfg.frontend_dim, cfg.d_model),
+                                ("frames_dim", "embed"), "normal", dt, (0,)),
+        "layers": cm.stack_specs(layer, cfg.num_layers),
+        "final_norm": norm_specs(cfg),
+        "merge_proj": ParamSpec((cfg.d_model * ds, cfg.vision_dim),
+                                ("embed", "vision"), "normal", dt, (0,)),
+    }
+
+
+def vit_encode(p, cfg: ArchConfig, patches: jnp.ndarray, *,
+               impl: str = "auto", remat: bool = True) -> jnp.ndarray:
+    """patches [B, P, patch_dim] -> visual embeddings [B, P/ds, out_dim].
+
+    The ViT attends over the full (long) patch sequence — this is the
+    component the paper gives context parallelism — then merges ``ds``
+    consecutive tokens (pixel-unshuffle style) into one LM-space embedding.
+    """
+    B, P, _ = patches.shape
+    x = jnp.einsum("bpe,ed->bpd", patches.astype(p["patch_proj"].dtype),
+                   p["patch_proj"])
+    x = cm.shard_act(x, "hidden")
+
+    def body(x, lp):
+        def fn(lp, x):
+            h = apply_norm(lp["norm1"], x, cfg)
+            h = att.attention(lp["attn"], h, cfg, causal=False, impl=impl)
+            x = x + h
+            h = apply_norm(lp["norm2"], x, cfg)
+            return x + mlpm.mlp(lp["mlp"], h, cfg)
+        if remat:
+            fn = jax.checkpoint(fn)
+        return cm.shard_act(fn(lp, x), "hidden"), None
+
+    x, _ = jax.lax.scan(body, x, p["layers"])
+    x = apply_norm(p["final_norm"], x, cfg)
+    ds = downsample_factor(cfg)
+    x = x.reshape(B, P // ds, ds * cfg.d_model)
+    return jnp.einsum("bkm,mv->bkv", x, p["merge_proj"])

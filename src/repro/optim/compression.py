@@ -1,0 +1,96 @@
+"""Gradient compression for DP all-reduce: bf16 and int8 + error feedback.
+
+At 1000+-node scale the DP gradient all-reduce crosses DCI links; halving
+(bf16) or quartering (int8) its bytes is a direct win on the collective
+roofline term.  Int8 uses per-tensor max-abs scaling and an error-feedback
+residual (the quantization error is added back into the next step's
+gradient) — the standard trick that keeps SGD/Adam convergence unbiased in
+the long run.
+
+``compressed_psum_*`` are shard_map-compatible primitives (reduce across a
+named axis); ``ErrorFeedback`` carries the residual state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_int8(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8-on-the-wire psum: quantize locally, sum int32, average scales.
+
+    Bytes on the wire: 1/4 of fp32 (plus one scalar)."""
+    q, scale = _quant_int8(x)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale_sum = jax.lax.psum(scale, axis_name)
+    n = jax.lax.psum(jnp.float32(1.0), axis_name)
+    # each shard contributed q_i * scale_i; approximate with mean scale
+    return (total.astype(jnp.float32) * (scale_sum / n)).astype(x.dtype)
+
+
+def compressed_psum_bf16(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    return jax.lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any                 # same tree as grads, fp32
+
+
+def ef_init(grads_like) -> ErrorFeedback:
+    return ErrorFeedback(jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), grads_like))
+
+
+def ef_compress_tree(grads, ef: ErrorFeedback, axis_name: str,
+                     method: str = "int8"):
+    """Apply error-feedback compression + psum across ``axis_name`` to a
+    gradient tree (call inside shard_map). Returns (reduced, new_ef)."""
+    n = None
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        if method == "int8":
+            q, scale = _quant_int8(corrected)
+            local_deq = _dequant_int8(q, scale)
+            new_r = corrected - local_deq
+            total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            scale_sum = jax.lax.psum(scale, axis_name)
+            cnt = jax.lax.psum(jnp.float32(1.0), axis_name)
+            out = total.astype(jnp.float32) * (scale_sum / cnt) / cnt
+        elif method == "bf16":
+            sent = corrected.astype(jnp.bfloat16)
+            new_r = corrected - sent.astype(jnp.float32)
+            cnt = jax.lax.psum(jnp.float32(1.0), axis_name)
+            out = jax.lax.psum(sent, axis_name).astype(jnp.float32) / cnt
+        else:
+            cnt = jax.lax.psum(jnp.float32(1.0), axis_name)
+            out = jax.lax.psum(corrected, axis_name) / cnt
+            new_r = jnp.zeros_like(corrected)
+        return out.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    reduced = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_ef = ErrorFeedback(jax.tree_util.tree_unflatten(
+        treedef, [o[1] for o in outs]))
+    return reduced, new_ef
+
+
+def wire_bytes(tree, method: str) -> int:
+    """Bytes a DP all-reduce of ``tree`` puts on the wire per rank."""
+    per = {"int8": 1, "bf16": 2, "none": 4}[method]
+    return sum(x.size * per for x in jax.tree_util.tree_leaves(tree))

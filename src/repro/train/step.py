@@ -1,0 +1,202 @@
+"""Step builders: jitted train / prefill / decode steps with shardings.
+
+``build_train_step`` produces the exact function the multi-pod dry-run
+lowers for ``train_*`` cells; ``build_prefill_step`` / ``build_decode_step``
+cover the ``prefill_*`` / ``decode_*`` / ``long_*`` cells.
+
+Microbatching (grad accumulation) follows the per-section ``mbs`` knob from
+the paper: the global batch is laid out shard-major ``[dp, n_micro, mbs]``
+so the reshape into microbatches is local to every data shard (no
+collectives for data staging).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.types import ArchConfig, ParallelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.models import common as cm
+from repro.models.model import Model
+from repro.optim import adamw, schedules
+
+
+def _act_hook_for(mesh: Mesh, batch_size: int, seq_len: int,
+                  sequence_parallel: bool = False):
+    dp = shd.dp_axes(mesh)
+    bspec = shd.batch_spec(mesh, batch_size, seq_len)
+    b_ax, s_ax = tuple(bspec)[0], tuple(bspec)[1]
+    model_size = mesh.shape.get("model", 1)
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks is sequence-sharded over the model axis, turning the per-layer
+    # TP all-reduce pair into reduce-scatter + all-gather at half the bytes
+    # (and keeping norms local)
+    sp_ax = ("model" if sequence_parallel and s_ax is None
+             and seq_len % model_size == 0 else s_ax)
+
+    def hook(x, kind):
+        if kind == "hidden" and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b_ax, sp_ax, None)))
+        if kind == "logits" and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b_ax, s_ax, "model")))
+        if kind == "attn_q" and x.ndim == 4:
+            h_ax = "model" if x.shape[2] % model_size == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b_ax, s_ax, h_ax, None)))
+        if kind == "moe_dispatch" and x.ndim == 4:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b_ax, None, None, None)))
+        return x
+
+    return hook
+
+
+def num_microbatches(shape: ShapeConfig, mesh: Mesh,
+                     parallel: ParallelConfig) -> int:
+    dp_total = shd.axis_size(mesh, shd.dp_axes(mesh))
+    n = shape.global_batch // (dp_total * parallel.mbs)
+    return max(n, 1)
+
+
+def _split_microbatches(batch: dict, n_micro: int, dp_total: int):
+    """[GB, ...] -> [n_micro, GB/n_micro, ...] with shard-major layout so
+    the split is local to each data shard."""
+    def split(x):
+        gb = x.shape[0]
+        mgb = gb // n_micro
+        per = mgb // dp_total
+        if per == 0 or gb % n_micro:
+            return jnp.broadcast_to(x[None], (n_micro,) + x.shape)
+        y = x.reshape((dp_total, n_micro, per) + x.shape[1:])
+        return jnp.swapaxes(y, 0, 1).reshape(
+            (n_micro, mgb) + x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
+                     shape: ShapeConfig, *, rules=None,
+                     lr_schedule=None,
+                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    """Returns (jitted_step, shardings) — step(params, opt_state, batch,
+    step_idx) -> (params, opt_state, metrics)."""
+    cfg = model.cfg
+    specs = model.specs()
+    rules = rules if rules is not None else shd.rules_for(cfg, mesh)
+    p_shard = shd.param_shardings(specs, mesh, rules)
+    o_shard = shd.opt_state_shardings(specs, mesh, rules,
+                                      zero=parallel.zero_opt)
+    batch_specs = model.input_specs(shape)
+    b_shard = shd.data_shardings(mesh, batch_specs)
+    dp_total = shd.axis_size(mesh, shd.dp_axes(mesh))
+    n_micro = num_microbatches(shape, mesh, parallel)
+    lr_fn = lr_schedule or functools.partial(
+        schedules.warmup_cosine, peak_lr=3e-4, warmup_steps=100,
+        total_steps=10_000)
+    hook = _act_hook_for(mesh, shape.global_batch // n_micro, shape.seq_len,
+                         sequence_parallel=parallel.sequence_parallel)
+    rep = shd.replicated(mesh)
+
+    def loss_fn(p, mb):
+        with cm.act_hook(hook):
+            return model.loss(p, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step_idx):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs_tree = _split_microbatches(batch, n_micro, dp_total)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(micro, (g0, jnp.float32(0)),
+                                             mbs_tree)
+            grads = jax.tree_util.tree_map(
+                lambda g, p: (g / n_micro).astype(p.dtype), g_sum, params)
+            loss = l_sum / n_micro
+            metrics = {}
+        lr = lr_fn(step_idx)
+        new_params, new_opt, gnorm = adamw.update(grads, opt_state, lr,
+                                                  opt_cfg)
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, out_metrics
+
+    step = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard, rep),
+        out_shardings=(p_shard, o_shard,
+                       {"loss": rep, "grad_norm": rep, "lr": rep}),
+        donate_argnums=(0, 1))
+    shardings = {"params": p_shard, "opt": o_shard, "batch": b_shard}
+    return step, shardings
+
+
+def _logits_sharding(mesh: Mesh, batch: int, vocab: int) -> NamedSharding:
+    dpax = shd.dp_axes(mesh)
+    b_ax = dpax if batch % shd.axis_size(mesh, dpax) == 0 else None
+    v_ax = "model" if vocab % mesh.shape.get("model", 1) == 0 else None
+    return NamedSharding(mesh, P(b_ax, v_ax))
+
+
+def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
+                       rules=None):
+    specs = model.specs()
+    rules = rules if rules is not None else shd.rules_for(model.cfg, mesh)
+    p_shard = shd.param_shardings(specs, mesh, rules)
+    batch_specs = model.input_specs(shape)
+    b_shard = shd.data_shardings(mesh, batch_specs)
+    cache_specs = model.cache_specs(shape)
+    c_shard = shd.cache_shardings(mesh, cache_specs)
+    hook = _act_hook_for(mesh, shape.global_batch, shape.seq_len)
+    logits_shard = _logits_sharding(mesh, shape.global_batch,
+                                    model.cfg.padded_vocab)
+
+    def prefill_step(params, batch):
+        with cm.act_hook(hook):
+            logits, cache = model.prefill(params, batch)
+        return logits, cache
+
+    step = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                   out_shardings=(logits_shard, c_shard))
+    return step, {"params": p_shard, "batch": b_shard, "cache": c_shard}
+
+
+def build_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
+                      rules=None):
+    """serve_step for decode cells: one new token against a seq_len cache."""
+    specs = model.specs()
+    rules = rules if rules is not None else shd.rules_for(model.cfg, mesh)
+    p_shard = shd.param_shardings(specs, mesh, rules)
+    batch_specs = model.input_specs(shape)
+    b_shard = shd.data_shardings(mesh, batch_specs)
+    cache_specs = model.cache_specs(shape)
+    c_shard = shd.cache_shardings(mesh, cache_specs)
+    logits_shard = _logits_sharding(mesh, shape.global_batch,
+                                    model.cfg.padded_vocab)
+    rep = shd.replicated(mesh)
+
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = model.decode(params, cache, token, pos)
+        return logits, new_cache
+
+    step = jax.jit(decode_step,
+                   in_shardings=(p_shard, c_shard, b_shard["token"], rep),
+                   out_shardings=(logits_shard, c_shard),
+                   donate_argnums=(1,))
+    return step, {"params": p_shard, "cache": c_shard,
+                  "token": b_shard["token"]}

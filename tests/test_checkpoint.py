@@ -1,0 +1,110 @@
+"""Checkpointing: roundtrip, atomic commit, retention, resume."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"params": {"w": jax.random.normal(k[0], (8, 4)),
+                       "b": jax.random.normal(k[1], (4,))},
+            "opt": {"mu": jax.random.normal(k[2], (8, 4))}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    tree = _tree()
+    ck.save(10, tree)
+    got = ck.restore(10, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_retention(tmp_path):
+    ck = Checkpointer(tmp_path, keep_last_n=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=True)
+    ck.save(5, _tree())
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_atomic_no_partial_visible(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(1, _tree())
+    # a leftover tmp dir must be invisible to discovery
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert ck.all_steps() == [1]
+
+
+def test_restore_casts_dtype(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    ck.save(1, tree)
+    target = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    got = ck.restore(1, target)
+    assert got["w"].dtype == jnp.bfloat16
+
+
+def test_missing_leaf_raises(tmp_path):
+    ck = Checkpointer(tmp_path, async_save=False)
+    ck.save(1, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        ck.restore(1, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+def test_train_loop_resumes(tmp_path):
+    """Integration: loop saves, a fresh loop resumes at the right step."""
+    from repro.optim import adamw
+    from repro.train.loop import train
+
+    def make_step():
+        def step(params, opt, batch, idx):
+            grads = {"w": params["w"] - batch}
+            p, o, gn = adamw.update(grads, opt, jnp.float32(0.1),
+                                    adamw.AdamWConfig(weight_decay=0.0))
+            return p, o, {"loss": jnp.sum(grads["w"] ** 2),
+                          "grad_norm": gn}
+        return step
+
+    def batches():
+        while True:
+            yield jnp.asarray([1.0, 2.0])
+
+    params = {"w": jnp.zeros(2)}
+    opt = adamw.init(params)
+    ck = Checkpointer(tmp_path, async_save=False)
+    r1 = train(make_step(), params=params, opt_state=opt,
+               batches=batches(), num_steps=5, checkpointer=ck,
+               checkpoint_every=2, log_every=100, log_fn=lambda s: None)
+    assert r1.final_step == 5
+    # fresh state, same checkpointer -> resumes from step 5
+    params2 = {"w": jnp.zeros(2)}
+    opt2 = adamw.init(params2)
+    r2 = train(make_step(), params=params2, opt_state=opt2,
+               batches=batches(), num_steps=8, checkpointer=ck,
+               checkpoint_every=100, log_every=100, log_fn=lambda s: None)
+    assert r2.resumed_from == 5
+    assert r2.steps_run == 3
+
+
+def test_straggler_monitor():
+    from repro.train.loop import StragglerMonitor
+    mon = StragglerMonitor(factor=2.0)
+    for _ in range(10):
+        assert not mon.observe(0.1)
+    assert mon.observe(0.5)
+    assert mon.flagged == 1

@@ -1,0 +1,73 @@
+"""Data pipeline: determinism, modality mixture, mask semantics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (lm_batches, sample_modalities,
+                                  vlm_batches)
+
+
+def test_lm_batches_deterministic():
+    a = next(lm_batches(batch=4, seq_len=16, vocab=128, seed=7))
+    b = next(lm_batches(batch=4, seq_len=16, vocab=128, seed=7))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = next(lm_batches(batch=4, seq_len=16, vocab=128, seed=8))
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    b = next(lm_batches(batch=2, seq_len=16, vocab=64, seed=0))
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_tokens_learnable_structure():
+    """The markov generator must beat random chance for a bigram
+    predictor — otherwise training-loss-decreases tests are meaningless."""
+    b = next(lm_batches(batch=16, seq_len=256, vocab=64, seed=0))
+    toks = np.asarray(b["tokens"])
+    labs = np.asarray(b["labels"])
+    # per-sequence: same current-token should frequently map to the same
+    # next-token (deterministic map + 10% noise)
+    hits = total = 0
+    for r in range(toks.shape[0]):
+        seen = {}
+        for t, l in zip(toks[r], labs[r]):
+            if t in seen:
+                total += 1
+                hits += int(seen[t] == l)
+            seen[t] = l
+    assert total > 100
+    assert hits / total > 0.6, hits / total
+
+
+def test_modality_mixture_ratio():
+    rng = np.random.default_rng(0)
+    samples = sample_modalities(rng, 4000, vision_ratio=0.25,
+                                image_tokens=64)
+    frac = sum(s.has_image for s in samples) / len(samples)
+    assert 0.2 < frac < 0.3
+    for s in samples:
+        if s.has_image:
+            assert s.vit_patches == 4 * s.image_tokens   # 4:1 downsample
+        else:
+            assert s.vit_patches == 0
+
+
+def test_vlm_batch_semantics():
+    it = vlm_batches(batch=8, seq_len=64, vocab=128, vision_ratio=0.5,
+                     image_tokens=8, patch_dim=16, seed=0)
+    b = next(it)
+    has = np.asarray(b["has_image"]).astype(bool)
+    valid = np.asarray(b["image_valid"])
+    mask = np.asarray(b["loss_mask"])
+    patches = np.asarray(b["patches"], np.float32)
+    for i in range(8):
+        assert valid[i].all() == has[i]
+        if has[i]:
+            assert mask[i, :8].sum() == 0        # no loss on image slots
+            assert np.abs(patches[i]).sum() > 0
+        else:
+            assert mask[i].all()
+            assert np.abs(patches[i]).sum() == 0

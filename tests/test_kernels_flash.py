@@ -1,0 +1,119 @@
+"""Flash attention: Pallas (interpret) and jnp blockwise vs the naive
+oracle, swept over shapes/dtypes/masking modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+SHAPES = [
+    # B, S, T, H, KV, D
+    (2, 128, 128, 4, 2, 16),      # GQA
+    (1, 256, 256, 8, 8, 32),      # MHA
+    (2, 128, 64, 4, 1, 16),       # MQA, cross lengths
+    (1, 64, 64, 6, 3, 8),         # odd group
+]
+
+
+def _qkv(shape, dtype):
+    B, S, T, H, KV, D = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 32)])
+def test_pallas_fwd_sweep(shape, dtype, causal, window):
+    q, k, v = _qkv(shape, dtype)
+    o_ref = ref.mha_reference(q, k, v, causal=causal, window=window)
+    o_pl = flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=True, block_q=64, block_kv=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_jnp_flash_fwd(shape):
+    q, k, v = _qkv(shape, jnp.float32)
+    o_ref = ref.mha_reference(q, k, v, causal=True)
+    o = ref.flash_attention_jnp(q, k, v, causal=True, block_q=32,
+                                block_kv=32)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_pallas_grads_match_oracle():
+    q, k, v = _qkv((2, 128, 128, 4, 2, 16), jnp.float32)
+
+    def f_pl(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(
+            q, k, v, causal=True, interpret=True, block_q=64,
+            block_kv=64)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.mha_reference(q, k, v, causal=True)))
+
+    g1 = jax.grad(f_pl, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                                   rtol=1e-4)
+
+
+def test_segment_ids_packed_sequences():
+    B, S, H, KV, D = 2, 96, 4, 2, 16
+    q, k, v = _qkv((B, S, S, H, KV, D), jnp.float32)
+    seg = jnp.repeat(jnp.arange(3)[None], B, 0).repeat(S // 3, 1)
+    o_ref = ref.mha_reference(q, k, v, causal=True, segment_q=seg,
+                              segment_kv=seg)
+    o = ref.flash_attention_jnp(q, k, v, causal=True, segment_q=seg,
+                                segment_kv=seg, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_non_divisible_lengths_pad_path():
+    """Odd lengths (e.g. whisper's 1500 frames) must pad, not shrink
+    blocks."""
+    q, k, v = _qkv((2, 150, 150, 4, 2, 16), jnp.float32)
+    for causal in (True, False):
+        o_ref = ref.mha_reference(q, k, v, causal=causal)
+        o = ref.flash_attention_jnp(q, k, v, causal=causal, block_q=64,
+                                    block_kv=64)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_q_offset_decode_semantics():
+    """q_offset shifts the causal mask (CP shards / decode windows)."""
+    B, S, H, KV, D = 1, 64, 2, 2, 8
+    q, k, v = _qkv((B, 32, S, H, KV, D), jnp.float32)
+    o_ref = ref.mha_reference(q, k, v, causal=True, q_offset=32)
+    o = ref.flash_attention_jnp(q, k, v, causal=True, q_offset=32,
+                                block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_hypothesis_like_random_sweep():
+    rng = np.random.default_rng(42)
+    for _ in range(6):
+        H = int(rng.choice([2, 4, 8]))
+        KV = int(rng.choice([g for g in [1, 2, 4, 8] if H % g == 0]))
+        D = int(rng.choice([8, 16, 32]))
+        S = int(rng.choice([32, 64, 96]))
+        q, k, v = _qkv((1, S, S, H, KV, D), jnp.float32)
+        o_ref = ref.mha_reference(q, k, v, causal=True)
+        o = flash_attention(q, k, v, causal=True, interpret=True,
+                            block_q=32, block_kv=32)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                                   atol=5e-5, rtol=5e-5)

@@ -1,0 +1,130 @@
+"""Wavefront scheduler (Algorithm 1) + timeline simulator properties,
+including the paper's Figure-7 worked example and hypothesis-based
+invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (merge_fanout_schedules,
+                                  partition_global_batch,
+                                  schedule_global_batch,
+                                  wavefront_schedule)
+from repro.core.simulator import Sample, simulate, simulate_fanout
+
+
+def vis(i, f, b, fc=1.0, bc=2.0):
+    return Sample(i, f, fc, 0.0, 0.0, bc, b)
+
+
+def txt(i, fc=1.0, bc=2.0):
+    return Sample(i, 0.0, fc, 0.0, 0.0, bc, 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Simulator semantics
+# --------------------------------------------------------------------------- #
+def test_single_sample_is_serial_chain():
+    s = Sample(0, 1.0, 2.0, 0.5, 0.25, 3.0, 0.75)
+    res = simulate([s])
+    assert res.makespan == pytest.approx(sum(s.tuple6))
+
+
+def test_zero_phases_cost_nothing():
+    res = simulate([txt(0), txt(1)])
+    assert res.makespan == pytest.approx(2 * 3.0)   # 2 × (f_c + b_c)
+    assert res.critical_utilization == pytest.approx(1.0)
+
+
+def test_critical_lower_bound():
+    samples = [vis(0, 0.5, 1.0), txt(1), vis(2, 2.0, 0.1), txt(3)]
+    res = simulate(samples)
+    lower = sum(s.t_f_c + s.t_b_c for s in samples)
+    assert res.makespan >= lower - 1e-9
+
+
+def test_dependencies_respected():
+    # one huge-BC sample alone: critical must wait for it
+    s = vis(0, 5.0, 1.0, fc=1.0, bc=1.0)
+    res = simulate([s], collect_timeline=True)
+    f_bc_end = [e for e in res.timeline if e[2] == "f_bc"][0][4]
+    f_c_start = [e for e in res.timeline if e[2] == "f_c"][0][3]
+    assert f_c_start >= f_bc_end - 1e-9
+
+
+# --------------------------------------------------------------------------- #
+# Figure 7: LLM section fully saturated, ViT hidden, 100% rel. efficiency
+# --------------------------------------------------------------------------- #
+def test_paper_figure7_example():
+    samples = [vis(0, 0.1, 0.2), txt(1), txt(2), vis(3, 0.2, 0.4),
+               txt(4), txt(5), vis(6, 0.15, 0.3), txt(7), txt(8),
+               vis(9, 0.25, 0.5), txt(10), txt(11)]
+    per_rank, merged = schedule_global_batch(samples, 4)
+    res = simulate_fanout(per_rank)
+    text_only_bound = 3 * 3.0          # 3 samples × (1 fwd + 2 bwd)
+    assert res.makespan == pytest.approx(text_only_bound)
+    assert res.critical_utilization == pytest.approx(1.0)
+    # merged producer schedule is a round-robin over ranks
+    assert len(merged) == 12
+
+
+def test_wavefront_beats_fifo_when_vision_heavy():
+    # all-vision-first FIFO stalls the critical section
+    samples = [vis(0, 3.0, 3.0), vis(1, 3.0, 3.0), txt(2), txt(3), txt(4),
+               txt(5)]
+    sch = wavefront_schedule(samples)
+    assert sch.makespan <= sch.fifo_makespan + 1e-9
+    assert sch.sim.critical_idle <= simulate(samples).critical_idle + 1e-9
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm-1 invariants (hypothesis)
+# --------------------------------------------------------------------------- #
+sample_strategy = st.builds(
+    lambda i, f, fc, bc, b: Sample(i, f, fc, 0.0, 0.0, bc, b),
+    st.integers(0, 10_000),
+    st.floats(0.0, 5.0, allow_nan=False),
+    st.floats(0.1, 5.0, allow_nan=False),
+    st.floats(0.1, 5.0, allow_nan=False),
+    st.floats(0.0, 5.0, allow_nan=False))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(sample_strategy, min_size=1, max_size=7))
+def test_schedule_is_permutation_and_no_worse_than_fifo(samples):
+    sch = wavefront_schedule(samples)
+    assert sorted(s.idx for s in sch.order) == sorted(s.idx for s in
+                                                      samples)
+    assert sch.makespan <= sch.fifo_makespan + 1e-9
+    lower = sum(s.t_f_c + s.t_b_c for s in samples)
+    assert sch.makespan >= lower - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(sample_strategy, min_size=8, max_size=16).map(
+    lambda l: l[:len(l) // 4 * 4]), st.just(4))
+def test_partition_balances_with_equal_counts(samples, dp):
+    ranks = partition_global_batch(samples, dp)
+    assert all(len(r) == len(samples) // dp for r in ranks)
+    assert sorted(s.idx for r in ranks for s in r) == sorted(
+        s.idx for s in samples)
+    loads = [sum(s.t_f_bc + s.t_b_ac for s in r) for r in ranks]
+    # greedy LPT: max/min spread bounded by the largest single item
+    biggest = max((s.t_f_bc + s.t_b_ac) for s in samples)
+    assert max(loads) - min(loads) <= biggest + 1e-9
+
+
+def test_merge_round_robin_order():
+    a = [txt(0), txt(1)]
+    b = [txt(10), txt(11)]
+    merged = merge_fanout_schedules([a, b])
+    assert [(r, s.idx) for r, s in merged] == [(0, 0), (1, 10), (0, 1),
+                                               (1, 11)]
+
+
+def test_scheduling_overhead_is_small():
+    """§3.4: scheduling must be overlappable with GPU execution."""
+    samples = [vis(i, 0.1 * (i % 3), 0.1) if i % 3 == 0 else txt(i)
+               for i in range(32)]
+    sch = wavefront_schedule(samples)
+    assert sch.elapsed_s < 5.0
