@@ -25,7 +25,7 @@ def _mk_samples(n, vision_ratio, vit_f, vit_b, seed=0):
     return out
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     rows = []
 
     # Fig. 7 exact example
@@ -54,14 +54,28 @@ def run() -> list:
                      round(sch.sim.critical_utilization, 4)))
 
     # overhead scaling (per-rank sample counts the paper cites: tens to
-    # low hundreds)
-    for n in (8, 16, 32, 64):
+    # low hundreds; n=128/256 stress the pruned-insertion fast path)
+    for n in (8, 16, 32, 64) if smoke else (8, 16, 32, 64, 128, 256):
         s = _mk_samples(n, 0.3, 0.5, 1.0)
         t0 = time.perf_counter()
         wavefront_schedule(s)
         dt = time.perf_counter() - t0
         rows.append((f"alg1_overhead_n{n}", round(dt * 1e6, 1),
                      round(dt, 5)))
+
+    # fast path vs seed O(N^4) reference (identical schedules by
+    # construction; see tests/test_scheduler_fast.py)
+    from repro.core.scheduler import wavefront_schedule_reference
+    s = _mk_samples(64, 0.3, 0.5, 1.0)
+    t0 = time.perf_counter()
+    mk_fast = wavefront_schedule(s).makespan
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    mk_ref = wavefront_schedule_reference(s).makespan
+    t_ref = time.perf_counter() - t0
+    assert mk_fast == mk_ref, (mk_fast, mk_ref)
+    rows.append(("alg1_n64_speedup_vs_reference", round(t_fast * 1e6, 1),
+                 round(t_ref / max(t_fast, 1e-9), 1)))
     return rows
 
 

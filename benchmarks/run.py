@@ -6,23 +6,45 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
 * bench_vlm       — Fig. 8 (VLM training, §4.1)
 * bench_distill   — Fig. 9 + Fig. 10 (distillation, §4.2)
 * bench_kernels   — kernel layer (substrate)
+
+``--smoke`` runs the cheap CI subset (scheduler only, capped sweep).
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import inspect
 import sys
 import traceback
+from pathlib import Path
+
+# allow `python benchmarks/run.py` from anywhere: repo root (for the
+# `benchmarks` namespace package) and src/ (for `repro`)
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))
 
 
 def main() -> None:
-    from benchmarks import (bench_distill, bench_kernels, bench_scheduler,
-                            bench_vlm)
-    modules = [("scheduler", bench_scheduler), ("vlm", bench_vlm),
-               ("distill", bench_distill), ("kernels", bench_kernels)]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: scheduler benches only")
+    args = ap.parse_args()
+
+    names = ["scheduler"]
+    if not args.smoke:
+        names += ["vlm", "distill", "kernels"]
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in modules:
+    for name in names:
+        # import inside the guard: a collection-time failure in one bench
+        # module must not take down the others (or the smoke subset)
         try:
-            for row in mod.run():
+            mod = importlib.import_module(f"benchmarks.bench_{name}")
+            kw = {}
+            if "smoke" in inspect.signature(mod.run).parameters:
+                kw["smoke"] = args.smoke
+            for row in mod.run(**kw):
                 print(",".join(str(x) for x in row), flush=True)
         except Exception:
             failures += 1

@@ -134,7 +134,9 @@ def maybe_colocate_exclusive(g: SectionGraph, a: str, b: str, *,
     if coactivation_rate > rate_tol or ratio > size_ratio_tol:
         return g
     merged = SectionConfig(f"{a}+{b}", sa.arch, sa.parallel,
-                           trainable=sa.trainable or sb.trainable)
+                           trainable=sa.trainable or sb.trainable,
+                           critical=sa.critical or sb.critical,
+                           seq_scale=max(sa.seq_scale, sb.seq_scale))
     out = SectionGraph()
     out.add(merged)
     for name, s in g.sections.items():

@@ -20,7 +20,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.graph import SectionGraph
@@ -31,20 +30,30 @@ from repro.core.types import SectionConfig
 def carve_meshes(graph: SectionGraph, devices: Optional[Sequence] = None,
                  *, gpu_counts: Optional[Dict[str, int]] = None
                  ) -> Dict[str, Mesh]:
-    """Partition the device list into per-section meshes shaped (dp, tp).
+    """Partition the device list into per-section meshes.
 
-    gpu_counts overrides section.parallel.devices (e.g. from the planner)."""
+    Every section mesh follows the ``repro.dist.sharding`` axis-naming
+    contract — ``ParallelConfig(dp, tp, pp, cp)`` maps 1:1 onto
+    ``(data, pipe, seq, model)`` axes — so the sharding rules, the CP
+    attention and the PP loss all address section meshes identically.
+
+    gpu_counts overrides section.parallel.devices (e.g. from the planner);
+    the extra/fewer devices widen/narrow the TP axis."""
+    from repro.dist.sharding import section_mesh
+
     devices = list(devices if devices is not None else jax.devices())
     meshes: Dict[str, Mesh] = {}
     off = 0
     for name, sec in graph.sections.items():
-        n = (gpu_counts or {}).get(name, sec.parallel.devices)
+        par = sec.parallel
+        n = (gpu_counts or {}).get(name, par.devices)
         assert off + n <= len(devices), (
             f"need {off + n} devices, have {len(devices)}")
-        group = np.array(devices[off:off + n])
-        dp = sec.parallel.dp
-        tp = n // dp
-        meshes[name] = Mesh(group.reshape(dp, tp), ("data", "model"))
+        base = par.dp * par.pp * par.cp
+        assert n % base == 0, (name, n, base)
+        if n != par.devices:
+            par = par.replace(tp=n // base)
+        meshes[name] = section_mesh(devices[off:off + n], par, name)
         off += n
     return meshes
 

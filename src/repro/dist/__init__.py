@@ -1,0 +1,12 @@
+"""Distributed-parallelism layer: sharding rules, context parallelism, PP.
+
+This package is the single place where the paper's per-section parallelism
+configuration ``C^s = (DP, TP, PP, CP, mbs)`` (§3.2) meets physical JAX
+meshes:
+
+* :mod:`repro.dist.sharding` — logical-axis → mesh-axis rules, the axis
+  naming contract, and every ``NamedSharding`` tree the step builders use;
+* :mod:`repro.dist.context`  — context-parallel attention over the CP axis;
+* :mod:`repro.dist.pipeline` — stage-partitioned (GPipe) loss for PP.
+"""
+from repro.dist import context, pipeline, sharding  # noqa: F401

@@ -1,0 +1,80 @@
+"""Context-parallel attention over the CP mesh axis (paper §3.2: the
+``cp`` knob of a section's ``C^s``).
+
+Long-sequence sections (ViT over visual tokens, 500K-token decode hosts)
+shard the *sequence* across devices.  Two exact execution modes:
+
+* ``ulysses``   — DeepSpeed-Ulysses style: all-to-all reshards
+  [B, S/cp, H, D] → [B, S, H/cp, D], runs full-sequence flash attention on
+  a head slice, and all-to-alls back.  Comm is O(S·H·D/cp) per device;
+  requires ``H % cp == 0`` and ``KV % cp == 0``.
+* ``allgather`` — keeps Q sequence-sharded and all-gathers K/V (the
+  fallback for MQA-style sections where KV heads don't divide cp); the
+  causal mask is offset per shard.
+
+Both modes are numerically exact (checked against the naive reference in
+``tests/drivers/driver_pipeline_cp.py``) and differentiable — the flash
+custom-VJP recomputes inside the shard, so the backward pass reuses the
+same collectives (transposed) the forward issued.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import AXIS_MODEL, AXIS_SEQ, shard_map
+from repro.kernels import ref
+
+
+def _cp_axis(mesh, axis: Optional[str]) -> str:
+    if axis is not None:
+        return axis
+    if AXIS_SEQ in mesh.axis_names and dict(mesh.shape)[AXIS_SEQ] > 1:
+        return AXIS_SEQ
+    return AXIS_SEQ if AXIS_SEQ in mesh.axis_names else AXIS_MODEL
+
+
+def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
+                 mode: str = "ulysses", causal: bool = True,
+                 window: int = 0, scale: Optional[float] = None,
+                 block_q: int = 512, block_kv: int = 512):
+    """Context-parallel GQA attention.
+
+    q [B, S, H, D]; k, v [B, S, KV, D] — logically full-sequence arrays
+    whose sequence dim is (or will be, via the in_specs) sharded over the
+    CP axis.  Returns [B, S, H, D] with the same layout as q.
+    """
+    ax = _cp_axis(mesh, axis)
+    cp = dict(mesh.shape)[ax]
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    assert S % cp == 0, (S, cp)
+    if mode == "ulysses" and (H % cp or KV % cp):
+        # MQA / odd head counts can't head-shard: fall back to KV gather
+        mode = "allgather"
+
+    spec = P(None, ax, None, None)
+    shard_len = S // cp
+
+    def local(ql, kl, vl):
+        idx = jax.lax.axis_index(ax)
+        flash = functools.partial(ref.flash_attention_jnp, causal=causal,
+                                  window=window, scale=scale,
+                                  block_q=block_q, block_kv=block_kv)
+        if mode == "allgather":
+            kg = jax.lax.all_gather(kl, ax, axis=1, tiled=True)
+            vg = jax.lax.all_gather(vl, ax, axis=1, tiled=True)
+            return flash(ql, kg, vg, q_offset=idx * shard_len)
+        # ulysses: seq-sharded -> head-sharded (full sequence per device)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=ax,
+                                split_axis=2, concat_axis=1, tiled=True)
+        o = flash(a2a(ql), a2a(kl), a2a(vl))
+        return jax.lax.all_to_all(o, ax, split_axis=1, concat_axis=2,
+                                  tiled=True)
+
+    run = shard_map(local, mesh, (spec, spec, spec), spec)
+    return run(q, k, v)

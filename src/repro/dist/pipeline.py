@@ -1,0 +1,148 @@
+"""Stage-partitioned (GPipe) training loss for PP sections (paper §3.2).
+
+``build_pp_loss`` partitions the layer stack of an LM across the pipeline
+mesh axis and returns a loss function that runs a GPipe schedule inside
+``shard_map``: microbatches enter stage 0, activations hop stage→stage via
+``ppermute``, and the last stage computes the CE loss (summed, then
+normalized globally — numerically identical to the monolithic loss; the
+MoE aux term is averaged per microbatch, an approximation that vanishes
+for dense archs).
+
+The whole schedule is differentiable — ``ppermute``/``psum`` transpose to
+the reverse hops, so ``jax.grad`` of the returned function yields exactly
+the 1F1B-style backward traffic pattern.
+
+Known cost (SPMD uniformity): every stage executes the embed and the
+final-norm/unembed/CE program for all microbatches, with non-last-stage
+results masked out — the loss pays ``pp ×`` the unembed FLOPs.  A
+ring-distributed CE (each stage scoring ``n_micro/pp`` microbatches) would
+remove this; tracked in ROADMAP.md open items.
+
+Axis naming follows ``repro.dist.sharding``: stages live on ``pipe`` when
+the mesh has one, else on ``pod`` (cross-pod PP — DCN-friendly, since only
+[mbs, S, D] activations cross stage boundaries per tick).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ArchConfig
+from repro.dist.sharding import AXIS_DATA, AXIS_PIPE, AXIS_POD, shard_map
+from repro.models import transformer as tf
+
+
+def _stage_axis(mesh, axis: Optional[str]) -> str:
+    if axis is not None:
+        return axis
+    return AXIS_PIPE if AXIS_PIPE in mesh.axis_names else AXIS_POD
+
+
+def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
+                  stage_axis: Optional[str] = None,
+                  data_axis: Optional[str] = None,
+                  impl: str = "auto", remat: bool = True,
+                  aux_weight: float = 0.01) -> Tuple:
+    """Returns ``(loss_fn, info)`` — ``loss_fn(params, batch) -> scalar``.
+
+    params is the full (un-partitioned) ``tf.lm_specs`` tree; shard_map
+    in_specs place the stacked ``layers`` dim on the stage axis and
+    replicate embed/norm/unembed, so the caller passes ordinary global
+    arrays and the partitioner does the placement."""
+    st_ax = _stage_axis(mesh, stage_axis)
+    d_ax = data_axis or (AXIS_DATA if AXIS_DATA in mesh.axis_names
+                         else None)
+    sizes = dict(mesh.shape)
+    pp = sizes[st_ax]
+    dp = sizes.get(d_ax, 1) if d_ax else 1
+    pk, reps = tf.group_layout(cfg)
+    assert reps % pp == 0, (
+        f"{reps} layer groups do not divide {pp} pipeline stages")
+    per_stage = reps // pp
+    perm = [(i, i + 1) for i in range(pp - 1)]
+
+    def stage_fwd(layers_local, x):
+        aux_tot = jnp.zeros((), jnp.float32)
+        for li in range(per_stage):
+            group = jax.tree_util.tree_map(lambda a: a[li], layers_local)
+            for j, (mixer, ffn) in enumerate(pk):
+                fn = functools.partial(tf._sublayer_fwd, cfg=cfg,
+                                       mixer=mixer, ffn=ffn, causal=True,
+                                       segment_ids=None, impl=impl)
+                if remat:
+                    fn = jax.checkpoint(fn)
+                x, aux = fn(group[f"sub{j}"], x)
+                aux_tot = aux_tot + aux
+        return x, aux_tot
+
+    def pipeline_body(params, batch, *, d_axis):
+        stage = jax.lax.axis_index(st_ax)
+        layers_local = params["layers"]
+        tokens = batch["tokens"]
+        Bl, S = tokens.shape
+        assert Bl % n_micro == 0, (Bl, n_micro)
+        msz = Bl // n_micro
+
+        def micro(tree, t):
+            return jax.tree_util.tree_map(
+                lambda a: a[t * msz:(t + 1) * msz], tree)
+
+        embeds = [tf.embed_tokens(params, cfg, micro(batch, t))
+                  for t in range(n_micro)]
+        recv = jnp.zeros_like(embeds[0])
+        aux_sum = jnp.zeros((), jnp.float32)
+        outs = []
+        for t in range(n_micro + pp - 1):
+            inp = jnp.where(stage == 0, embeds[min(t, n_micro - 1)], recv)
+            h, aux = stage_fwd(layers_local, inp)
+            # aux is only meaningful while this stage holds a live
+            # microbatch (ticks [stage, stage + n_micro))
+            live = jnp.logical_and(t >= stage, t - stage < n_micro)
+            aux_sum = aux_sum + jnp.where(live, aux, 0.0)
+            outs.append(h)
+            if perm:
+                recv = jax.lax.ppermute(h, st_ax, perm)
+
+        # last stage: final norm + unembed + CE sums per microbatch
+        nll_sum = jnp.zeros((), jnp.float32)
+        mask_sum = jnp.zeros((), jnp.float32)
+        for j in range(n_micro):
+            hj = tf.apply_norm(params["final_norm"], outs[pp - 1 + j], cfg)
+            logits = tf.unembed(params, cfg, hj).astype(jnp.float32)
+            mb = micro(batch, j)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, mb["labels"][..., None], axis=-1)[..., 0]
+            m = mb.get("loss_mask")
+            m = jnp.ones_like(lse) if m is None else m.astype(jnp.float32)
+            nll_sum = nll_sum + jnp.sum((lse - gold) * m)
+            mask_sum = mask_sum + jnp.sum(m)
+
+        is_last = (stage == pp - 1).astype(jnp.float32)
+        axes = (st_ax,) + ((d_axis,) if d_axis else ())
+        total_nll = jax.lax.psum(nll_sum * is_last, axes)
+        total_mask = jax.lax.psum(mask_sum * is_last, axes)
+        aux_tot = jax.lax.psum(aux_sum, (st_ax,)) / n_micro
+        if d_axis:
+            aux_tot = jax.lax.psum(aux_tot, (d_axis,)) / dp
+        return total_nll / jnp.maximum(total_mask, 1.0) \
+            + aux_weight * aux_tot
+
+    def loss_fn(params, batch):
+        p_specs = {k: (P(st_ax) if k == "layers" else P())
+                   for k in params}
+        shard_b = d_ax is not None and \
+            batch["tokens"].shape[0] % (dp * n_micro) == 0
+        b_specs = {k: (P(d_ax) if shard_b else P()) for k in batch}
+        body = functools.partial(pipeline_body,
+                                 d_axis=d_ax if shard_b else None)
+        run = shard_map(body, mesh, (p_specs, b_specs), P())
+        return run(params, batch)
+
+    info = {"stage_axis": st_ax, "data_axis": d_ax, "stages": pp,
+            "groups_per_stage": per_stage, "n_micro": n_micro}
+    return loss_fn, info

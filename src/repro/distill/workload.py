@@ -26,7 +26,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import messages as msg
 from repro.core.graph import SectionGraph, build_distill_graph
@@ -190,7 +190,7 @@ class DistillRuntime:
         self.tp_shard = shd.param_shardings(self.t_specs, tm, t_rules)
         self.sp_shard = shd.param_shardings(self.s_specs, sm, s_rules)
         self.o_shard = shd.opt_state_shardings(self.s_specs, sm, s_rules)
-        self.h_shard = NamedSharding(sm, P("data", None, None))
+        self.h_shard = shd.dp_sharding(sm, 3)      # [B, S, D_t] handoff
 
         def teacher_fwd(params_t, tokens):
             return teacher_hidden(params_t, t_cfg, tokens, impl=impl)
@@ -211,15 +211,13 @@ class DistillRuntime:
 
         self.teacher_fwd = jax.jit(
             teacher_fwd,
-            in_shardings=(self.tp_shard,
-                          NamedSharding(tm, P("data", None))))
+            in_shardings=(self.tp_shard, shd.dp_sharding(tm)))
         rep_s = shd.replicated(sm)
+        batch_shard = {k: shd.dp_sharding(sm)
+                       for k in ("tokens", "labels", "loss_mask")}
         self.student_step = jax.jit(
             student_step, donate_argnums=(1,),
-            in_shardings=(self.sp_shard, self.o_shard,
-                          {"tokens": NamedSharding(sm, P("data", None)),
-                           "labels": NamedSharding(sm, P("data", None)),
-                           "loss_mask": NamedSharding(sm, P("data", None))},
+            in_shardings=(self.sp_shard, self.o_shard, batch_shard,
                           self.h_shard, rep_s, rep_s),
             out_shardings=(self.sp_shard, self.o_shard,
                            {"loss": rep_s, "ce": rep_s, "kl": rep_s,
@@ -249,8 +247,7 @@ class DistillRuntime:
         q = self.rt.queue
         tw = self.rt.workers["teacher"]
         tm = self.rt.mesh("teacher")
-        tokens_t = jax.device_put(batch["tokens"],
-                                  NamedSharding(tm, P("data", None)))
+        tokens_t = jax.device_put(batch["tokens"], shd.dp_sharding(tm))
 
         def produce():
             h = self.teacher_fwd(params_t, tokens_t)
@@ -263,7 +260,7 @@ class DistillRuntime:
         if w_t is None:
             w_t = self.teacher_unembed(params_t)
         sb = {k: jax.device_put(
-            v, NamedSharding(self.rt.mesh("student"), P("data", None)))
+            v, shd.dp_sharding(self.rt.mesh("student")))
             for k, v in batch.items()}
         params_s, opt, metrics = self.student_step(params_s, opt, sb, h_t,
                                                    w_t, jnp.int32(step_idx))

@@ -2,7 +2,7 @@
 
 State layout mirrors the parameter tree:  ``mu``/``nu``/``master`` get the
 parameter's sharding spec *extended over free mesh axes* (ZeRO) by
-``repro.dist.sharding.opt_state_sharding``.
+``repro.dist.sharding.opt_state_shardings``.
 """
 from __future__ import annotations
 

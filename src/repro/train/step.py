@@ -146,13 +146,6 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
     return step, shardings
 
 
-def _logits_sharding(mesh: Mesh, batch: int, vocab: int) -> NamedSharding:
-    dpax = shd.dp_axes(mesh)
-    b_ax = dpax if batch % shd.axis_size(mesh, dpax) == 0 else None
-    v_ax = "model" if vocab % mesh.shape.get("model", 1) == 0 else None
-    return NamedSharding(mesh, P(b_ax, v_ax))
-
-
 def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
                        rules=None):
     specs = model.specs()
@@ -163,8 +156,8 @@ def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
     cache_specs = model.cache_specs(shape)
     c_shard = shd.cache_shardings(mesh, cache_specs)
     hook = _act_hook_for(mesh, shape.global_batch, shape.seq_len)
-    logits_shard = _logits_sharding(mesh, shape.global_batch,
-                                    model.cfg.padded_vocab)
+    logits_shard = shd.logits_sharding(mesh, shape.global_batch,
+                                       model.cfg.padded_vocab)
 
     def prefill_step(params, batch):
         with cm.act_hook(hook):
@@ -186,8 +179,8 @@ def build_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
     b_shard = shd.data_shardings(mesh, batch_specs)
     cache_specs = model.cache_specs(shape)
     c_shard = shd.cache_shardings(mesh, cache_specs)
-    logits_shard = _logits_sharding(mesh, shape.global_batch,
-                                    model.cfg.padded_vocab)
+    logits_shard = shd.logits_sharding(mesh, shape.global_batch,
+                                       model.cfg.padded_vocab)
     rep = shd.replicated(mesh)
 
     def decode_step(params, cache, token, pos):

@@ -1,0 +1,72 @@
+"""Section-graph construction rules (§3.1): mutually-exclusive encoder
+colocation, flag propagation, and the one-critical-section invariant."""
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.graph import SectionGraph, build_distill_graph, \
+    maybe_colocate_exclusive
+from repro.core.types import ParallelConfig, SectionConfig
+
+
+def _sec(name, cfg, critical=False, seq_scale=1.0):
+    return SectionConfig(name, cfg, ParallelConfig(), trainable=True,
+                         critical=critical, seq_scale=seq_scale)
+
+
+def test_colocate_merges_exclusive_encoders():
+    cfg = get_reduced("granite-3-8b")
+    g = SectionGraph()
+    g.add(_sec("audio", cfg, seq_scale=2.0))
+    g.add(_sec("vision", cfg))
+    g.add(_sec("llm", cfg, critical=True))
+    g.connect("audio", "llm")
+    g.connect("vision", "llm")
+    out = maybe_colocate_exclusive(g, "audio", "vision",
+                                   coactivation_rate=0.01)
+    assert "audio+vision" in out.sections
+    assert out.critical.name == "llm"
+    assert out.sections["audio+vision"].seq_scale == 2.0
+    # edges rehomed onto the merged section
+    assert {e.src for e in out.producers_of("llm")} == {"audio+vision"}
+
+
+def test_colocate_propagates_critical_flag():
+    """Merging a critical section must keep the exactly-one-critical
+    invariant (regression: the merged section used to drop the flag)."""
+    cfg = get_reduced("granite-3-8b")
+    g = SectionGraph()
+    g.add(_sec("enc", cfg))
+    g.add(_sec("llm", cfg, critical=True))
+    g.connect("enc", "llm")
+    out = maybe_colocate_exclusive(g, "enc", "llm", coactivation_rate=0.0)
+    assert out.critical.name == "enc+llm"
+    out.validate()
+
+
+def test_colocate_rejected_on_high_coactivation():
+    cfg = get_reduced("granite-3-8b")
+    g = SectionGraph()
+    g.add(_sec("a", cfg))
+    g.add(_sec("b", cfg, critical=True))
+    out = maybe_colocate_exclusive(g, "a", "b", coactivation_rate=0.5)
+    assert out is g
+
+
+def test_colocate_rejected_on_size_mismatch():
+    big = get_reduced("granite-3-8b")
+    small = big.replace(num_layers=2, d_model=32, d_ff=64, num_heads=2,
+                        num_kv_heads=1, head_dim=16, vocab_size=64)
+    g = SectionGraph()
+    g.add(_sec("a", big))
+    g.add(_sec("b", small, critical=True))
+    out = maybe_colocate_exclusive(g, "a", "b", coactivation_rate=0.0)
+    assert out is g
+
+
+def test_distill_graph_shape():
+    t = get_reduced("qwen2.5-32b")
+    s = get_reduced("qwen1.5-0.5b")
+    g = build_distill_graph(t, s, fanout=2)
+    assert g.critical.name == "student"
+    (edge,) = g.producers_of("student")
+    assert edge.hidden_handoff and edge.fanout == 2

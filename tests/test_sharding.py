@@ -3,14 +3,16 @@ extension, cache specs — checked against AbstractMesh (no devices)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.dist import sharding as shd
 from repro.models.common import ParamSpec
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# shd.abstract_mesh: AbstractMesh's constructor signature differs across
+# jax releases; the helper normalizes it.
+MESH = shd.abstract_mesh((16, 16), ("data", "model"))
+MESH3 = shd.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_dense_qkv_specs():
