@@ -27,9 +27,8 @@ from repro.core.messages import MessageQueue
 from repro.core.types import SectionConfig
 
 
-def carve_meshes(graph: SectionGraph, devices: Optional[Sequence] = None,
-                 *, gpu_counts: Optional[Dict[str, int]] = None
-                 ) -> Dict[str, Mesh]:
+def carve_sections(graph: SectionGraph, devices: Optional[Sequence] = None,
+                   *, gpu_counts: Optional[Dict[str, int]] = None):
     """Partition the device list into per-section meshes.
 
     Every section mesh follows the ``repro.dist.sharding`` axis-naming
@@ -38,11 +37,17 @@ def carve_meshes(graph: SectionGraph, devices: Optional[Sequence] = None,
     attention and the PP loss all address section meshes identically.
 
     gpu_counts overrides section.parallel.devices (e.g. from the planner);
-    the extra/fewer devices widen/narrow the TP axis."""
+    the extra/fewer devices widen/narrow the TP axis.
+
+    Returns ``(meshes, parallels)``: the *effective* ParallelConfig per
+    section (TP widened/narrowed by gpu_counts) rides along so step
+    builders can validate pp/cp against the mesh they were carved with
+    (``repro.train.step.parallel_regime``) instead of re-deriving it."""
     from repro.dist.sharding import section_mesh
 
     devices = list(devices if devices is not None else jax.devices())
     meshes: Dict[str, Mesh] = {}
+    parallels: Dict[str, Any] = {}
     off = 0
     for name, sec in graph.sections.items():
         par = sec.parallel
@@ -54,8 +59,17 @@ def carve_meshes(graph: SectionGraph, devices: Optional[Sequence] = None,
         if n != par.devices:
             par = par.replace(tp=n // base)
         meshes[name] = section_mesh(devices[off:off + n], par, name)
+        parallels[name] = par
         off += n
-    return meshes
+    return meshes, parallels
+
+
+def carve_meshes(graph: SectionGraph, devices: Optional[Sequence] = None,
+                 *, gpu_counts: Optional[Dict[str, int]] = None
+                 ) -> Dict[str, Mesh]:
+    """Mesh-only view of :func:`carve_sections` (kept for callers that
+    don't need the effective ParallelConfigs)."""
+    return carve_sections(graph, devices, gpu_counts=gpu_counts)[0]
 
 
 @dataclass
@@ -115,12 +129,27 @@ class MaestroRuntime:
                  gpu_counts: Optional[Dict[str, int]] = None):
         graph.validate()
         self.graph = graph
-        self.meshes = carve_meshes(graph, devices, gpu_counts=gpu_counts)
+        self.meshes, self.parallels = carve_sections(
+            graph, devices, gpu_counts=gpu_counts)
         self.queue = MessageQueue()
         self.workers = {name: SectionWorker(name) for name in graph.sections}
 
     def mesh(self, section: str) -> Mesh:
         return self.meshes[section]
+
+    def parallel(self, section: str):
+        """Effective ParallelConfig of the carved section (TP widened by
+        gpu_counts when the planner handed it extra devices)."""
+        return self.parallels[section]
+
+    def build_train_step(self, section: str, model, shape, **kw):
+        """Train-step builder bound to this section's carved mesh and
+        effective C^s — the runtime executes exactly the step the dry-run
+        lowers, pp/cp dispatch included."""
+        from repro.train import step as step_mod
+        return step_mod.build_train_step(model, self.meshes[section],
+                                         self.parallels[section], shape,
+                                         **kw)
 
     def shutdown(self):
         for w in self.workers.values():

@@ -8,5 +8,11 @@ meshes:
   naming contract, and every ``NamedSharding`` tree the step builders use;
 * :mod:`repro.dist.context`  — context-parallel attention over the CP axis;
 * :mod:`repro.dist.pipeline` — stage-partitioned (GPipe) loss for PP.
+
+Dispatch: ``repro.train.step.parallel_regime`` routes a section's config
+end-to-end — mesh ``pipe`` axis > 1 → :func:`pipeline.build_pp_loss`,
+mesh ``seq`` axis > 1 → :func:`context.cp_attention` (installed as the
+model attention impl); mismatched or unsupported configs raise rather
+than silently training with those axes replicated.
 """
 from repro.dist import context, pipeline, sharding  # noqa: F401

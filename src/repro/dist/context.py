@@ -16,6 +16,15 @@ Both modes are numerically exact (checked against the naive reference in
 ``tests/drivers/driver_pipeline_cp.py``) and differentiable — the flash
 custom-VJP recomputes inside the shard, so the backward pass reuses the
 same collectives (transposed) the forward issued.
+
+End-to-end wiring: ``repro.train.step.build_train_step`` dispatches on the
+mesh — a non-trivial ``seq`` axis (``ParallelConfig.cp > 1``) installs
+:func:`cp_attention_impl` as the model's full-sequence attention
+implementation via ``repro.models.attention.attention_impl``, so every
+self-attention call in the train step runs context-parallel.  The shard_map
+is manual over the ``seq`` (and optionally batch/data) axes only; any other
+mesh axes are replicated *inside* the attention body while the surrounding
+computation stays GSPMD-sharded — exact in all compositions (cp×tp, dp×cp).
 """
 from __future__ import annotations
 
@@ -26,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import AXIS_MODEL, AXIS_SEQ, shard_map
+from repro.dist.sharding import AXIS_MODEL, AXIS_SEQ, axis_size, shard_map
 from repro.kernels import ref
 
 
@@ -41,12 +50,18 @@ def _cp_axis(mesh, axis: Optional[str]) -> str:
 def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
                  mode: str = "ulysses", causal: bool = True,
                  window: int = 0, scale: Optional[float] = None,
-                 block_q: int = 512, block_kv: int = 512):
+                 block_q: int = 512, block_kv: int = 512,
+                 batch_axes=None):
     """Context-parallel GQA attention.
 
     q [B, S, H, D]; k, v [B, S, KV, D] — logically full-sequence arrays
     whose sequence dim is (or will be, via the in_specs) sharded over the
     CP axis.  Returns [B, S, H, D] with the same layout as q.
+
+    batch_axes — mesh axes (name or tuple) to keep the batch dim sharded
+    over inside the shard_map (the dp axes of a section mesh); ignored when
+    B doesn't divide them.  Attention is batch-parallel, so this only
+    pins layout — numerics are unchanged.
     """
     ax = _cp_axis(mesh, axis)
     cp = dict(mesh.shape)[ax]
@@ -57,7 +72,12 @@ def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
         # MQA / odd head counts can't head-shard: fall back to KV gather
         mode = "allgather"
 
-    spec = P(None, ax, None, None)
+    b_ax = None
+    if batch_axes:
+        nb = axis_size(mesh, batch_axes)
+        if nb > 1 and B % nb == 0:
+            b_ax = batch_axes
+    spec = P(b_ax, ax, None, None)
     shard_len = S // cp
 
     def local(ql, kl, vl):
@@ -78,3 +98,31 @@ def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
 
     run = shard_map(local, mesh, (spec, spec, spec), spec)
     return run(q, k, v)
+
+
+def cp_attention_impl(mesh, *, axis: Optional[str] = None,
+                      mode: str = "ulysses", batch_axes=None,
+                      block_q: int = 512, block_kv: int = 512):
+    """Model-pluggable CP attention entry point.
+
+    Returns a callable with the ``repro.models.attention.attention_impl``
+    contract — ``impl(q, k, v, *, causal, window, segment_q, segment_kv,
+    scale)`` — that runs :func:`cp_attention` over this mesh's CP axis.
+    ``build_train_step`` installs it when the section mesh has a
+    non-trivial ``seq`` axis, which is how ``ParallelConfig.cp > 1``
+    reaches every self-attention call of the model."""
+    def impl(q, k, v, *, causal=True, window=0, segment_q=None,
+             segment_kv=None, scale=None):
+        if segment_q is not None or segment_kv is not None:
+            raise NotImplementedError(
+                "cp_attention: packed-sequence segment ids are not "
+                "supported under context parallelism")
+        if q.shape[1] != k.shape[1]:
+            raise NotImplementedError(
+                "cp_attention: cross-attention (S_q != S_kv) is not "
+                "supported under context parallelism")
+        return cp_attention(q, k, v, mesh, axis=axis, mode=mode,
+                            causal=causal, window=window, scale=scale,
+                            block_q=block_q, block_kv=block_kv,
+                            batch_axes=batch_axes)
+    return impl

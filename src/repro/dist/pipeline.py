@@ -4,13 +4,27 @@
 mesh axis and returns a loss function that runs a GPipe schedule inside
 ``shard_map``: microbatches enter stage 0, activations hop stage→stage via
 ``ppermute``, and the last stage computes the CE loss (summed, then
-normalized globally — numerically identical to the monolithic loss; the
-MoE aux term is averaged per microbatch, an approximation that vanishes
-for dense archs).
+normalized globally).  The result is numerically identical to the
+*monolithic* ``tf.lm_loss`` over the full batch (n_micro = 1), including
+the MoE aux term: router statistics (frac, prob) — which are linear in the
+token population, unlike the aux scalar — are accumulated per MoE layer
+across microbatches and DP shards and only then combined into the
+load-balancing loss, so microbatch splitting does not perturb it.
 
 The whole schedule is differentiable — ``ppermute``/``psum`` transpose to
 the reverse hops, so ``jax.grad`` of the returned function yields exactly
 the 1F1B-style backward traffic pattern.
+
+End-to-end wiring: ``repro.train.step.build_train_step`` dispatches to
+this builder whenever the section mesh has a non-trivial ``pipe`` axis
+(``ParallelConfig.pp > 1``); the train step then takes a single
+``value_and_grad`` of the staged loss instead of the plain grad-
+accumulation scan, and the optimizer update is unchanged.  The shard_map
+is manual over *all* mesh axes: axes not named in the specs (``seq``,
+``model``) are replicated inside the body, so pp×tp / dp×pp compositions
+are exact (TP then shards parameters at rest via ``rules_for`` but the
+pipeline body computes each stage's layers unsharded per device).
+pp×cp is rejected by the dispatcher.
 
 Known cost (SPMD uniformity): every stage executes the embed and the
 final-norm/unembed/CE program for all microbatches, with non-last-stage
@@ -25,14 +39,16 @@ the mesh has one, else on ``pod`` (cross-pod PP — DCN-friendly, since only
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.types import ArchConfig
-from repro.dist.sharding import AXIS_DATA, AXIS_PIPE, AXIS_POD, shard_map
+from repro.dist.sharding import (AXIS_DATA, AXIS_PIPE, AXIS_POD,
+                                 axis_size, shard_map)
+from repro.models import common as cm
 from repro.models import transformer as tf
 
 
@@ -42,42 +58,88 @@ def _stage_axis(mesh, axis: Optional[str]) -> str:
     return AXIS_PIPE if AXIS_PIPE in mesh.axis_names else AXIS_POD
 
 
+def _data_axes(mesh, st_ax: str, data_axis) -> tuple:
+    """DP axes of the pipeline shard_map, outermost first: all of
+    (pod, data) that exist and are not the stage axis — on a multi-pod PP
+    mesh the pod axis carries data parallelism too, matching
+    ``sharding.dp_axes`` (dropping it would silently duplicate compute
+    per pod and double the in-pipeline microbatch size)."""
+    if data_axis is not None:
+        return (data_axis,) if isinstance(data_axis, str) else \
+            tuple(data_axis)
+    return tuple(a for a in (AXIS_POD, AXIS_DATA)
+                 if a in mesh.axis_names and a != st_ax)
+
+
+def contiguous_microbatch(tree, t: int, msz: int):
+    """Default microbatch layout: microbatch ``t`` is the ``t``-th
+    contiguous [msz] slice of the (per-DP-shard) batch dim.  Under the
+    shard-major global layout ``[dp, n_micro, mbs]`` the train-step data
+    contract uses (see ``repro.train.step``), this selects exactly the same
+    microbatches as ``_split_microbatches`` does on the monolithic path."""
+    return jax.tree_util.tree_map(lambda a: a[t * msz:(t + 1) * msz], tree)
+
+
 def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
                   stage_axis: Optional[str] = None,
                   data_axis: Optional[str] = None,
                   impl: str = "auto", remat: bool = True,
-                  aux_weight: float = 0.01) -> Tuple:
+                  aux_weight: float = 0.01, causal: bool = True,
+                  act_hook: Optional[Callable] = None,
+                  mb_layout: Callable = contiguous_microbatch) -> Tuple:
     """Returns ``(loss_fn, info)`` — ``loss_fn(params, batch) -> scalar``.
 
     params is the full (un-partitioned) ``tf.lm_specs`` tree; shard_map
     in_specs place the stacked ``layers`` dim on the stage axis and
     replicate embed/norm/unembed, so the caller passes ordinary global
-    arrays and the partitioner does the placement."""
+    arrays and the partitioner does the placement.
+
+    causal    — False for encoder-style (ViT) sections.
+    act_hook  — activation hook installed (via ``common.act_hook``) inside
+                the pipeline body.  Defaults to None, which *disables* any
+                hook active at trace time: sharding-constraint hooks are
+                illegal inside the manual shard_map region.  Hooks passed
+                here must be shard-local (dtype casts, debug taps, …).
+    mb_layout — external microbatch layout: ``(local_batch, t, msz) ->
+                microbatch`` tree slicer, so callers with a different data
+                layout than the shard-major default can thread it through.
+    """
     st_ax = _stage_axis(mesh, stage_axis)
-    d_ax = data_axis or (AXIS_DATA if AXIS_DATA in mesh.axis_names
-                         else None)
+    d_ax = _data_axes(mesh, st_ax, data_axis) or None
     sizes = dict(mesh.shape)
     pp = sizes[st_ax]
-    dp = sizes.get(d_ax, 1) if d_ax else 1
+    dp = axis_size(mesh, d_ax)
     pk, reps = tf.group_layout(cfg)
     assert reps % pp == 0, (
         f"{reps} layer groups do not divide {pp} pipeline stages")
     per_stage = reps // pp
     perm = [(i, i + 1) for i in range(pp - 1)]
+    n_moe = per_stage * sum(1 for _, ffn in pk if ffn == "moe")
+    E = max(cfg.num_experts, 1)
 
     def stage_fwd(layers_local, x):
-        aux_tot = jnp.zeros((), jnp.float32)
+        """Local layer groups.  Returns (x, stats [n_moe, 2, E]) — per-MoE-
+        sublayer router stats, kept separate so the nonlinear aux combine
+        happens only after cross-microbatch/shard averaging."""
+        stats = []
         for li in range(per_stage):
             group = jax.tree_util.tree_map(lambda a: a[li], layers_local)
             for j, (mixer, ffn) in enumerate(pk):
+                is_moe = ffn == "moe"
                 fn = functools.partial(tf._sublayer_fwd, cfg=cfg,
-                                       mixer=mixer, ffn=ffn, causal=True,
-                                       segment_ids=None, impl=impl)
+                                       mixer=mixer, ffn=ffn, causal=causal,
+                                       segment_ids=None, impl=impl,
+                                       collect_stats=is_moe)
                 if remat:
                     fn = jax.checkpoint(fn)
-                x, aux = fn(group[f"sub{j}"], x)
-                aux_tot = aux_tot + aux
-        return x, aux_tot
+                if is_moe:
+                    x, _, st = fn(group[f"sub{j}"], x)
+                    stats.append(st)
+                else:
+                    x, _ = fn(group[f"sub{j}"], x)
+        if stats:
+            return x, jnp.stack(stats)
+        return x, jnp.zeros((0, 2, E), jnp.float32)
 
     def pipeline_body(params, batch, *, d_axis):
         stage = jax.lax.axis_index(st_ax)
@@ -87,48 +149,59 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
         assert Bl % n_micro == 0, (Bl, n_micro)
         msz = Bl // n_micro
 
-        def micro(tree, t):
-            return jax.tree_util.tree_map(
-                lambda a: a[t * msz:(t + 1) * msz], tree)
+        with cm.act_hook(act_hook):
+            embeds = [tf.embed_tokens(params, cfg,
+                                      mb_layout(batch, t, msz))
+                      for t in range(n_micro)]
+            recv = jnp.zeros_like(embeds[0])
+            stats_sum = jnp.zeros((n_moe, 2, E), jnp.float32)
+            outs = []
+            for t in range(n_micro + pp - 1):
+                inp = jnp.where(stage == 0, embeds[min(t, n_micro - 1)],
+                                recv)
+                h, st = stage_fwd(layers_local, inp)
+                # stats are only meaningful while this stage holds a live
+                # microbatch (ticks [stage, stage + n_micro))
+                live = jnp.logical_and(t >= stage, t - stage < n_micro)
+                stats_sum = stats_sum + jnp.where(live, st,
+                                                  jnp.zeros_like(st))
+                outs.append(h)
+                if perm:
+                    recv = jax.lax.ppermute(h, st_ax, perm)
 
-        embeds = [tf.embed_tokens(params, cfg, micro(batch, t))
-                  for t in range(n_micro)]
-        recv = jnp.zeros_like(embeds[0])
-        aux_sum = jnp.zeros((), jnp.float32)
-        outs = []
-        for t in range(n_micro + pp - 1):
-            inp = jnp.where(stage == 0, embeds[min(t, n_micro - 1)], recv)
-            h, aux = stage_fwd(layers_local, inp)
-            # aux is only meaningful while this stage holds a live
-            # microbatch (ticks [stage, stage + n_micro))
-            live = jnp.logical_and(t >= stage, t - stage < n_micro)
-            aux_sum = aux_sum + jnp.where(live, aux, 0.0)
-            outs.append(h)
-            if perm:
-                recv = jax.lax.ppermute(h, st_ax, perm)
-
-        # last stage: final norm + unembed + CE sums per microbatch
-        nll_sum = jnp.zeros((), jnp.float32)
-        mask_sum = jnp.zeros((), jnp.float32)
-        for j in range(n_micro):
-            hj = tf.apply_norm(params["final_norm"], outs[pp - 1 + j], cfg)
-            logits = tf.unembed(params, cfg, hj).astype(jnp.float32)
-            mb = micro(batch, j)
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(
-                logits, mb["labels"][..., None], axis=-1)[..., 0]
-            m = mb.get("loss_mask")
-            m = jnp.ones_like(lse) if m is None else m.astype(jnp.float32)
-            nll_sum = nll_sum + jnp.sum((lse - gold) * m)
-            mask_sum = mask_sum + jnp.sum(m)
+            # last stage: final norm + unembed + CE sums per microbatch
+            nll_sum = jnp.zeros((), jnp.float32)
+            mask_sum = jnp.zeros((), jnp.float32)
+            for j in range(n_micro):
+                hj = tf.apply_norm(params["final_norm"], outs[pp - 1 + j],
+                                   cfg)
+                logits = tf.unembed(params, cfg, hj).astype(jnp.float32)
+                mb = mb_layout(batch, j, msz)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(
+                    logits, mb["labels"][..., None], axis=-1)[..., 0]
+                m = mb.get("loss_mask")
+                m = jnp.ones_like(lse) if m is None else m.astype(
+                    jnp.float32)
+                nll_sum = nll_sum + jnp.sum((lse - gold) * m)
+                mask_sum = mask_sum + jnp.sum(m)
 
         is_last = (stage == pp - 1).astype(jnp.float32)
-        axes = (st_ax,) + ((d_axis,) if d_axis else ())
+        axes = (st_ax,) + tuple(d_axis or ())
         total_nll = jax.lax.psum(nll_sum * is_last, axes)
         total_mask = jax.lax.psum(mask_sum * is_last, axes)
-        aux_tot = jax.lax.psum(aux_sum, (st_ax,)) / n_micro
-        if d_axis:
-            aux_tot = jax.lax.psum(aux_tot, (d_axis,)) / dp
+        aux_tot = jnp.float32(0.0)
+        if n_moe:
+            # average the *linear* router stats over microbatches and DP
+            # shards first, then combine — exact full-batch aux (each
+            # stage's layers are distinct, so the stage psum is the layer
+            # sum, not an average)
+            stats = stats_sum / n_micro
+            if d_axis:
+                stats = jax.lax.psum(stats, tuple(d_axis)) / dp
+            frac, prob = stats[:, 0], stats[:, 1]
+            aux_local = E * jnp.sum(frac * prob) / cfg.experts_per_token
+            aux_tot = jax.lax.psum(aux_local, (st_ax,))
         return total_nll / jnp.maximum(total_mask, 1.0) \
             + aux_weight * aux_tot
 
@@ -144,5 +217,6 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
         return run(params, batch)
 
     info = {"stage_axis": st_ax, "data_axis": d_ax, "stages": pp,
-            "groups_per_stage": per_stage, "n_micro": n_micro}
+            "groups_per_stage": per_stage, "n_micro": n_micro,
+            "moe_layers_per_stage": n_moe}
     return loss_fn, info

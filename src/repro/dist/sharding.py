@@ -19,6 +19,17 @@ mesh axis   meaning
 Per-section ``ParallelConfig(dp, tp, pp, cp)`` maps 1:1 onto a
 ``(data, pipe, seq, model)`` mesh via :func:`section_mesh`.
 
+Dispatch contract (``repro.train.step.parallel_regime``): the step builders
+read the ``pipe`` / ``seq`` axis sizes of the mesh they are handed and pick
+the execution regime from them — ``pipe > 1`` routes the loss through
+``repro.dist.pipeline.build_pp_loss``, ``seq > 1`` installs
+``repro.dist.context.cp_attention`` as the model's attention
+implementation, and both must agree with ``ParallelConfig.pp`` / ``.cp``
+(mismatches raise instead of silently training replicated).  When the mesh
+has a non-trivial ``pipe`` axis, :func:`rules_for` additionally maps the
+stacked ``layers`` param dim onto it so parameters and optimizer state are
+stage-partitioned at rest, matching ``build_pp_loss``'s shard_map specs.
+
 Assignment is greedy left-to-right over a parameter's dims with two hard
 invariants (property-tested): a mesh axis is never used twice in one spec,
 and an axis is only assigned when the dim size divides it (divisibility
@@ -94,10 +105,17 @@ def rules_for(cfg: ArchConfig, mesh, *, teacher: bool = False) -> dict:
     teacher=True — forward-only frozen section: drop the FSDP rule
     (``embed`` → data).  A frozen teacher has no optimizer state to
     amortize the per-step all-gather against, so its weights stay
-    replicated over the data axis and only TP shards them."""
+    replicated over the data axis and only TP shards them.
+
+    On a mesh with a non-trivial ``pipe`` axis the stacked ``layers`` dim
+    is mapped onto it: parameters and optimizer state live stage-
+    partitioned at rest, matching the ``in_specs`` of
+    ``repro.dist.pipeline.build_pp_loss``."""
     rules = dict(DEFAULT_RULES)
     if teacher:
         del rules["embed"]
+    if dict(mesh.shape).get(AXIS_PIPE, 1) > 1:
+        rules["layers"] = (AXIS_PIPE,)
     return rules
 
 
@@ -244,9 +262,13 @@ def logits_sharding(mesh, batch: int, vocab: int) -> NamedSharding:
 
 def data_shardings(mesh, batch_specs) -> dict:
     """NamedSharding tree for a batch of ShapeDtypeStructs: dim 0 (batch)
-    over the dp axes when divisible, else dim 1 (sequence), else replicated."""
+    over the dp axes when divisible, else dim 1 (sequence), else replicated.
+    On a CP mesh (``seq`` axis > 1) dim 1 is additionally sequence-sharded
+    over ``seq`` when divisible, matching the activation layout
+    ``cp_attention`` expects."""
     dp = dp_axes(mesh)
     n = axis_size(mesh, dp)
+    cp = dict(mesh.shape).get(AXIS_SEQ, 1)
 
     def one(leaf):
         entries = [None] * leaf.ndim
@@ -254,6 +276,9 @@ def data_shardings(mesh, batch_specs) -> dict:
             entries[0] = dp
         elif dp and leaf.ndim >= 2 and leaf.shape[1] % n == 0:
             entries[1] = dp
+        if cp > 1 and leaf.ndim >= 2 and entries[1] is None \
+                and leaf.shape[1] % cp == 0:
+            entries[1] = AXIS_SEQ
         return NamedSharding(mesh, P(*entries))
 
     return jax.tree_util.tree_map(one, batch_specs)

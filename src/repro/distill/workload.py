@@ -21,6 +21,7 @@ Two execution modes:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Dict, Optional, Tuple
 
@@ -32,11 +33,39 @@ from repro.core import messages as msg
 from repro.core.graph import SectionGraph, build_distill_graph
 from repro.core.runtime import MaestroRuntime
 from repro.core.types import ArchConfig, ParallelConfig, ShapeConfig
+from repro.dist import context as cpx
 from repro.dist import sharding as shd
 from repro.kernels import ops as kops
+from repro.models import attention as att
 from repro.models import common as cm
 from repro.models import transformer as tf
 from repro.optim import adamw, schedules
+
+
+def _cp_ctx(mesh, *cfgs):
+    """Attention-impl context for one section mesh: installs cp_attention
+    when the mesh has a non-trivial ``seq`` axis, else a no-op.  Every
+    arch running on the mesh must pass the CP support check — an
+    attention-free section would otherwise never call the installed impl
+    and silently replicate the seq axis.  PP for distillation sections is
+    rejected by the callers (the staged loss builder only covers the
+    plain LM CE tail)."""
+    if dict(mesh.shape).get(shd.AXIS_SEQ, 1) > 1:
+        from repro.train.step import _check_pp_cp_support
+        for cfg in cfgs:
+            _check_pp_cp_support(cfg, "cp")
+        impl = cpx.cp_attention_impl(
+            mesh, batch_axes=shd.dp_axes(mesh) or None)
+        return lambda: att.attention_impl(impl)
+    return contextlib.nullcontext
+
+
+def _reject_pp(mesh, what: str) -> None:
+    if dict(mesh.shape).get(shd.AXIS_PIPE, 1) > 1:
+        raise NotImplementedError(
+            f"pipeline parallelism for {what} is not implemented (the "
+            "distillation loss tail — hidden-state KL — is not staged); "
+            "use dp/tp/cp for distill sections")
 
 
 def teacher_hidden(params_t, t_cfg: ArchConfig, tokens, *, impl="auto",
@@ -79,9 +108,17 @@ def build_colocated_step(t_cfg: ArchConfig, s_cfg: ArchConfig, mesh: Mesh,
                          lr_schedule=None,
                          opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
     """One jit: teacher fwd (frozen) + student train step. Teacher unembed
-    is passed separately (it lives with the student per §3.1)."""
+    is passed separately (it lives with the student per §3.1).
+
+    Dispatches like ``build_train_step``: ``ParallelConfig.cp > 1`` (mesh
+    ``seq`` axis) runs both teacher and student attention through
+    ``cp_attention``; ``pp > 1`` raises (no staged distill loss)."""
     from repro.train.step import (_act_hook_for, _split_microbatches,
-                                  num_microbatches)
+                                  num_microbatches, parallel_regime)
+    regime = parallel_regime(mesh, parallel)
+    _reject_pp(mesh, "the colocated distill step")
+    cp_ctx = (_cp_ctx(mesh, t_cfg, s_cfg) if regime == "cp"
+              else contextlib.nullcontext)
     t_rules = shd.rules_for(t_cfg, mesh, teacher=True)
     s_rules = shd.rules_for(s_cfg, mesh)
     t_specs = tf.lm_specs(t_cfg)
@@ -106,7 +143,7 @@ def build_colocated_step(t_cfg: ArchConfig, s_cfg: ArchConfig, mesh: Mesh,
     rep = shd.replicated(mesh)
 
     def loss_fn(p_s, mb, params_t):
-        with cm.act_hook(hook):
+        with cm.act_hook(hook), cp_ctx():
             h_t = teacher_hidden(jax.lax.stop_gradient(params_t), t_cfg,
                                  mb["tokens"], impl=impl)
             w_t = (params_t["embed"].T if t_cfg.tie_embeddings
@@ -182,6 +219,9 @@ class DistillRuntime:
             student_parallel=student_parallel)
         self.rt = MaestroRuntime(self.graph, devices)
         tm, sm = self.rt.mesh("teacher"), self.rt.mesh("student")
+        _reject_pp(tm, "the teacher section")
+        _reject_pp(sm, "the student section")
+        t_cp_ctx, s_cp_ctx = _cp_ctx(tm, t_cfg), _cp_ctx(sm, s_cfg)
 
         t_rules = shd.rules_for(t_cfg, tm, teacher=True)
         s_rules = shd.rules_for(s_cfg, sm)
@@ -193,15 +233,18 @@ class DistillRuntime:
         self.h_shard = shd.dp_sharding(sm, 3)      # [B, S, D_t] handoff
 
         def teacher_fwd(params_t, tokens):
-            return teacher_hidden(params_t, t_cfg, tokens, impl=impl)
+            with t_cp_ctx():
+                return teacher_hidden(params_t, t_cfg, tokens, impl=impl)
 
         def student_step(params_s, opt_state, batch, h_t, w_t, step_idx):
             def loss_fn(p):
-                return distill_loss(p, s_cfg, batch, h_t, w_t,
-                                    alpha=alpha, temperature=temperature,
-                                    impl=impl,
-                                    kl_impl="ref" if impl == "ref"
-                                    else "auto")
+                with s_cp_ctx():
+                    return distill_loss(p, s_cfg, batch, h_t, w_t,
+                                        alpha=alpha,
+                                        temperature=temperature,
+                                        impl=impl,
+                                        kl_impl="ref" if impl == "ref"
+                                        else "auto")
             (loss, met), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params_s)
             new_p, new_opt, gnorm = adamw.update(grads, opt_state,

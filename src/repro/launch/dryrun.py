@@ -33,7 +33,8 @@ def _cell_name(arch: str, shape: str, mesh: str) -> str:
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
-             mbs: int = 1, sp: bool = False) -> dict:
+             mbs: int = 1, sp: bool = False, pp: int = 1,
+             cp: int = 1) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -66,12 +67,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
 
     mesh_env = os.environ.get("REPRO_DRYRUN_MESH")
     if mesh_env:
+        # 2/3 dims: classic (pod,)data,model; 4/5 dims: the full section-
+        # mesh contract (pod,)data,pipe,seq,model (PP/CP dry-run cells)
         dims = tuple(int(x) for x in mesh_env.split(","))
-        axes = ("pod", "data", "model")[-len(dims):]
+        names = (("pod", "data", "pipe", "seq", "model") if len(dims) > 3
+                 else ("pod", "data", "model"))
+        axes = names[-len(dims):]
         from repro.launch.mesh import make_mesh
         mesh = make_mesh(dims, axes)
     else:
-        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                    pp=pp, cp=cp)
     n_dev = mesh.devices.size
     from repro.dist.sharding import head_pad_for
     pad = head_pad_for(cfg, mesh.shape["model"])
@@ -86,7 +92,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     t0 = time.time()
 
     if shape.kind == "train":
-        parallel = ParallelConfig(mbs=mbs, sequence_parallel=sp)
+        # pp/cp are read back from the mesh so REPRO_DRYRUN_MESH-built
+        # meshes validate too — build_train_step rejects any mismatch
+        mesh_sizes = dict(mesh.shape)
+        parallel = ParallelConfig(mbs=mbs, sequence_parallel=sp,
+                                  pp=mesh_sizes.get("pipe", 1),
+                                  cp=mesh_sizes.get("seq", 1))
         step, _ = step_mod.build_train_step(model, mesh, parallel, shape)
         pshapes = model.param_shapes()
         oshapes = adamw.state_specs(pshapes)
@@ -207,6 +218,12 @@ def main() -> None:
     ap.add_argument("--mbs", type=int, default=1)
     ap.add_argument("--sp", action="store_true",
                     help="sequence-parallel residual stream (train cells)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages: carve a pipe axis out of the "
+                         "data axis (train cells run the GPipe loss)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context parallelism: carve a seq axis out of "
+                         "the data axis (train cells run cp_attention)")
     ap.add_argument("--timeout", type=int, default=2400)
     ap.add_argument("--force", action="store_true",
                     help="recompute cells that already have results")
@@ -218,7 +235,8 @@ def main() -> None:
         name = _cell_name(args.arch, args.shape, args.mesh)
         try:
             rec = run_cell(args.arch, args.shape, args.mesh, out_dir,
-                           mbs=args.mbs, sp=args.sp)
+                           mbs=args.mbs, sp=args.sp, pp=args.pp,
+                           cp=args.cp)
         except Exception:
             rec = {"arch": args.arch, "shape": args.shape,
                    "mesh": args.mesh, "error": traceback.format_exc()}

@@ -24,6 +24,10 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=4096)
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--mbs", type=int, default=1)
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context parallelism: carve a seq axis out of "
+                         "the data axis (teacher+student attention run "
+                         "through cp_attention)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -42,10 +46,12 @@ def main() -> None:
 
     t_cfg = get_config(args.teacher)
     s_cfg = get_config(args.student)
-    mesh = make_production_mesh()
+    mesh = make_production_mesh(cp=args.cp)
     shape = ShapeConfig("distill", "train", args.seq, args.batch)
     step, _ = build_colocated_step(t_cfg, s_cfg, mesh, shape,
-                                   ParallelConfig(mbs=args.mbs), impl="ref")
+                                   ParallelConfig(mbs=args.mbs,
+                                                  cp=args.cp),
+                                   impl="ref")
     t_shapes = param_shapes(tf.lm_specs(t_cfg))
     s_shapes = param_shapes(tf.lm_specs(s_cfg))
     o_shapes = adamw.state_specs(s_shapes)

@@ -8,9 +8,22 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, pp: int = 1,
+                         cp: int = 1):
+    """Production mesh; ``pp``/``cp`` > 1 carve ``pipe``/``seq`` axes out
+    of the data axis (same device count), following the
+    ``repro.dist.sharding`` axis contract — so the dry-run lowers the same
+    PP/CP step the runtime executes on carved section meshes."""
+    if pp == 1 and cp == 1:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return jax.make_mesh(shape, axes)
+    assert 16 % (pp * cp) == 0, (pp, cp)
+    shape = (16 // (pp * cp), pp, cp, 16)
+    axes = ("data", "pipe", "seq", "model")
+    if multi_pod:
+        shape = (2,) + shape
+        axes = ("pod",) + axes
     return jax.make_mesh(shape, axes)
 
 

@@ -12,6 +12,7 @@ Keys are stored post-RoPE.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional
 
 import jax
@@ -21,6 +22,31 @@ from repro.core.types import ArchConfig
 from repro.kernels import ops as kops
 from repro.models import common as cm
 from repro.models.common import ParamSpec
+
+
+# --------------------------------------------------------------------------- #
+# Pluggable full-sequence attention implementation (set by the step builder
+# under a mesh context, like common.act_hook).  This is how distributed
+# attention — repro.dist.context.cp_attention for CP sections — reaches
+# inside every model's self-attention without the models knowing about
+# meshes.  The callable contract:
+#     impl(q, k, v, *, causal, window, segment_q, segment_kv, scale) -> o
+# with q [B, S, H, D] (head-padded), k/v [B, S, KV, D], o like q.
+# --------------------------------------------------------------------------- #
+_ATTN_IMPL = None
+
+
+@contextlib.contextmanager
+def attention_impl(fn):
+    """Install ``fn`` as the full-sequence attention implementation for the
+    duration of the context (trace-time; serving paths are unaffected)."""
+    global _ATTN_IMPL
+    prev = _ATTN_IMPL
+    _ATTN_IMPL = fn
+    try:
+        yield
+    finally:
+        _ATTN_IMPL = prev
 
 
 def attn_specs(cfg: ArchConfig) -> dict:
@@ -98,9 +124,14 @@ def attention(p, x, cfg: ArchConfig, *, causal: bool = True,
     if kv_override is not None:                       # cross-attention
         k, v = kv_override
     q = cm.shard_act(_pad_q_heads(q, cfg), "attn_q")
-    o = kops.flash_attention(
-        q, k, v, causal=causal, window=cfg.sliding_window,
-        segment_q=segment_ids, segment_kv=segment_ids, impl=impl)
+    if _ATTN_IMPL is not None:
+        o = _ATTN_IMPL(q, k, v, causal=causal, window=cfg.sliding_window,
+                       segment_q=segment_ids, segment_kv=segment_ids,
+                       scale=None)
+    else:
+        o = kops.flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            segment_q=segment_ids, segment_kv=segment_ids, impl=impl)
     o = _unpad_o_heads(cm.shard_act(o, "attn_q"), cfg, H)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 

@@ -35,6 +35,11 @@ class Model:
     prefill: Optional[Callable]
     decode: Optional[Callable]
     forward: Callable
+    # kernel selection / remat the closures above were built with — the PP
+    # step builder needs them to construct a stage-partitioned loss that
+    # matches ``loss`` exactly
+    impl: str = "auto"
+    remat: bool = True
 
     def specs(self):
         return self._specs
@@ -139,7 +144,8 @@ def build_model(cfg: ArchConfig, *, impl: str = "auto",
         def decode(p, cache, token, pos):
             return ed.encdec_decode(p, cfg, cache, token, pos)
 
-        return Model(cfg, specs, loss, prefill, decode, forward)
+        return Model(cfg, specs, loss, prefill, decode, forward,
+                     impl=impl, remat=remat)
 
     if cfg.family == "vit":
         specs = tf.lm_specs(cfg)
@@ -155,7 +161,8 @@ def build_model(cfg: ArchConfig, *, impl: str = "auto",
             return tf.lm_forward(p, cfg, batch, causal=False, impl=impl,
                                  remat=remat)[0]
 
-        return Model(cfg, specs, loss, None, None, forward)
+        return Model(cfg, specs, loss, None, None, forward,
+                     impl=impl, remat=remat)
 
     specs = tf.lm_specs(cfg)
 
@@ -172,4 +179,5 @@ def build_model(cfg: ArchConfig, *, impl: str = "auto",
     def decode(p, cache, token, pos):
         return tf.lm_decode(p, cfg, cache, token, pos)
 
-    return Model(cfg, specs, loss, prefill, decode, forward)
+    return Model(cfg, specs, loss, prefill, decode, forward,
+                 impl=impl, remat=remat)

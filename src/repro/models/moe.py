@@ -43,8 +43,19 @@ def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
     return max(int(c), cfg.experts_per_token)
 
 
-def moe(p, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+def moe(p, x, cfg: ArchConfig, *,
+        return_stats: bool = False) -> Tuple[jnp.ndarray, ...]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    return_stats=True additionally returns the router statistics the aux
+    loss is built from — ``stats[0] = frac`` (mean routed assignments per
+    expert), ``stats[1] = prob`` (mean router probability per expert), both
+    [E] fp32, token-means over this call's batch.  Both are *linear* in the
+    token population, so callers that split a batch into microbatches
+    (``repro.dist.pipeline.build_pp_loss``) can average stats across
+    microbatches/shards and recover the exact full-batch aux
+    ``E * sum(frac * prob) / K`` — the scalar aux itself is nonlinear in
+    (frac, prob) and cannot be averaged."""
     B, S, D = x.shape
     E, K = cfg.num_experts, cfg.experts_per_token
     C = capacity(S, cfg)
@@ -92,4 +103,7 @@ def moe(p, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     gw = (gates.astype(jnp.float32)
           * keep.astype(jnp.float32)).astype(x.dtype)
     y = jnp.sum(gathered * gw[..., None], axis=2)
+    if return_stats:
+        stats = jnp.stack([frac, prob]).astype(jnp.float32)
+        return y, aux, stats
     return y, aux

@@ -117,7 +117,13 @@ def lm_specs(cfg: ArchConfig) -> dict:
 # Forward passes
 # --------------------------------------------------------------------------- #
 def _sublayer_fwd(lp, x, cfg: ArchConfig, mixer: str, ffn: Optional[str],
-                  *, causal: bool, segment_ids, impl: str):
+                  *, causal: bool, segment_ids, impl: str,
+                  collect_stats: bool = False):
+    """One (mixer, ffn) sub-layer.  Returns (x, aux); with
+    ``collect_stats`` (MoE sub-layers only) returns (x, aux, stats) where
+    stats are the [2, E] router statistics of :func:`repro.models.moe.moe`
+    — the linear quantities PP microbatch accumulation needs for an exact
+    aux term."""
     h = apply_norm(lp["norm1"], x, cfg)
     if mixer == "attn":
         h = att.attention(lp["attn"], h, cfg, causal=causal,
@@ -126,13 +132,19 @@ def _sublayer_fwd(lp, x, cfg: ArchConfig, mixer: str, ffn: Optional[str],
         h = mb.mamba(lp["mamba"], h, cfg, impl=impl)
     x = x + h
     aux = jnp.zeros((), jnp.float32)
+    stats = None
     if ffn is not None:
         h = apply_norm(lp["norm2"], x, cfg)
         if ffn == "mlp":
             h = mlpm.mlp(lp[ffn], h, cfg)
+        elif collect_stats:
+            h, aux, stats = moem.moe(lp[ffn], h, cfg, return_stats=True)
         else:
             h, aux = moem.moe(lp[ffn], h, cfg)
         x = x + h
+    if collect_stats:
+        assert ffn == "moe", "collect_stats only applies to MoE sub-layers"
+        return x, aux, stats
     return x, aux
 
 

@@ -8,9 +8,26 @@ Microbatching (grad accumulation) follows the per-section ``mbs`` knob from
 the paper: the global batch is laid out shard-major ``[dp, n_micro, mbs]``
 so the reshape into microbatches is local to every data shard (no
 collectives for data staging).
+
+Dispatch rules (``parallel_regime``) — how a section's
+``ParallelConfig(dp, tp, pp, cp)`` reaches the compiled step:
+
+* ``dp`` / ``tp`` are carried by the mesh's ``data`` / ``model`` axes and
+  realized through GSPMD sharding constraints (``repro.dist.sharding``).
+* ``pp > 1`` (mesh ``pipe`` axis > 1) → **PP regime**: the loss is the
+  stage-partitioned GPipe loss from ``repro.dist.pipeline.build_pp_loss``
+  (microbatching happens inside the staged schedule); the step takes one
+  ``value_and_grad`` of it instead of the grad-accumulation scan.
+* ``cp > 1`` (mesh ``seq`` axis > 1) → **CP regime**: the plain step, with
+  ``repro.dist.context.cp_attention`` installed as the model's attention
+  implementation and activations sequence-sharded over ``seq``.
+* ``ParallelConfig.pp``/``.cp`` must match the mesh's ``pipe``/``seq``
+  sizes, and pp×cp is unsupported — both raise instead of silently
+  training with the pipe/seq devices replicated (the pre-PR-2 bug).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -20,9 +37,52 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.types import ArchConfig, ParallelConfig, ShapeConfig
 from repro.dist import sharding as shd
+from repro.models import attention as att
 from repro.models import common as cm
 from repro.models.model import Model
 from repro.optim import adamw, schedules
+
+
+def parallel_regime(mesh: Mesh, parallel: ParallelConfig) -> str:
+    """Validate ``parallel`` against the mesh and pick the step regime:
+    ``"plain"`` | ``"cp"`` | ``"pp"`` (see module docstring).  Raises
+    instead of letting a pp/cp > 1 config fall through to the replicated
+    step unannounced."""
+    sizes = dict(mesh.shape)
+    pp = sizes.get(shd.AXIS_PIPE, 1)
+    cp = sizes.get(shd.AXIS_SEQ, 1)
+    if parallel.pp != pp:
+        raise ValueError(
+            f"ParallelConfig.pp={parallel.pp} does not match the mesh's "
+            f"pipe axis ({pp}): a pp>1 section must run on a mesh carved "
+            f"by section_mesh/carve_meshes, not fall back to replication")
+    if parallel.cp != cp:
+        raise ValueError(
+            f"ParallelConfig.cp={parallel.cp} does not match the mesh's "
+            f"seq axis ({cp}): a cp>1 section must run on a mesh carved "
+            f"by section_mesh/carve_meshes, not fall back to replication")
+    if pp > 1 and cp > 1:
+        raise NotImplementedError(
+            "pp×cp composition is not supported (CP's shard_map cannot "
+            "nest inside the pipeline's); use pp×tp or cp×tp instead")
+    return "pp" if pp > 1 else ("cp" if cp > 1 else "plain")
+
+
+def _check_pp_cp_support(cfg: ArchConfig, regime: str) -> None:
+    if regime == "pp" and cfg.family == "audio":
+        raise NotImplementedError(
+            "pipeline parallelism is not implemented for encoder-decoder "
+            "(audio) sections — build_pp_loss stages tf.lm_specs stacks")
+    if regime == "cp":
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "context parallelism is not implemented for encoder-"
+                "decoder (audio) sections (cross-attention)")
+        if not any(cfg.is_attn_layer(i) for i in range(cfg.num_layers)):
+            raise NotImplementedError(
+                f"cp>1 on attention-free arch {cfg.name!r}: there is no "
+                "attention to sequence-shard, the seq axis would be "
+                "silently replicated")
 
 
 def _act_hook_for(mesh: Mesh, batch_size: int, seq_len: int,
@@ -31,6 +91,12 @@ def _act_hook_for(mesh: Mesh, batch_size: int, seq_len: int,
     bspec = shd.batch_spec(mesh, batch_size, seq_len)
     b_ax, s_ax = tuple(bspec)[0], tuple(bspec)[1]
     model_size = mesh.shape.get("model", 1)
+    cp = dict(mesh.shape).get(shd.AXIS_SEQ, 1)
+    if cp > 1 and s_ax is None and seq_len % cp == 0:
+        # CP: keep activations sequence-sharded over the seq axis between
+        # attention calls — cp_attention's shard_map in_specs match this
+        # layout, so only attention itself reshards
+        s_ax = shd.AXIS_SEQ
     # Megatron-style sequence parallelism: the residual stream between
     # blocks is sequence-sharded over the model axis, turning the per-layer
     # TP all-reduce pair into reduce-scatter + all-gather at half the bytes
@@ -59,20 +125,39 @@ def _act_hook_for(mesh: Mesh, batch_size: int, seq_len: int,
 
 def num_microbatches(shape: ShapeConfig, mesh: Mesh,
                      parallel: ParallelConfig) -> int:
+    """Grad-accumulation depth for this (shape × mesh × C^s) cell.
+
+    Raises at build time when the global batch cannot be laid out as
+    ``[dp_total, n_micro, mbs]`` — the pre-PR-2 behaviour silently
+    *duplicated* the full batch into every microbatch instead."""
     dp_total = shd.axis_size(mesh, shd.dp_axes(mesh))
-    n = shape.global_batch // (dp_total * parallel.mbs)
+    denom = dp_total * parallel.mbs
+    n = shape.global_batch // denom
+    # undersized global batches (< dp_total*mbs) stay legal — the batch is
+    # replicated / seq-sharded, not microbatched; anything larger must lay
+    # out exactly as [dp_total, n_micro, mbs]
+    if shape.global_batch > denom and shape.global_batch % denom:
+        raise ValueError(
+            f"global_batch={shape.global_batch} is not a multiple of "
+            f"dp_total*mbs={dp_total}*{parallel.mbs}: grad accumulation "
+            "would train on duplicated data with an inflated effective "
+            "batch; adjust ShapeConfig.global_batch or ParallelConfig.mbs")
     return max(n, 1)
 
 
 def _split_microbatches(batch: dict, n_micro: int, dp_total: int):
     """[GB, ...] -> [n_micro, GB/n_micro, ...] with shard-major layout so
-    the split is local to each data shard."""
+    the split is local to each data shard.  Raises on non-divisible
+    batches (never silently duplicates data)."""
     def split(x):
         gb = x.shape[0]
         mgb = gb // n_micro
         per = mgb // dp_total
-        if per == 0 or gb % n_micro:
-            return jnp.broadcast_to(x[None], (n_micro,) + x.shape)
+        if per == 0 or gb % n_micro or mgb % dp_total:
+            raise ValueError(
+                f"cannot split batch dim {gb} into {n_micro} microbatches "
+                f"× {dp_total} DP shards: global_batch must be a multiple "
+                "of dp_total*mbs")
         y = x.reshape((dp_total, n_micro, per) + x.shape[1:])
         return jnp.swapaxes(y, 0, 1).reshape(
             (n_micro, mgb) + x.shape[1:])
@@ -84,8 +169,19 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
                      lr_schedule=None,
                      opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
     """Returns (jitted_step, shardings) — step(params, opt_state, batch,
-    step_idx) -> (params, opt_state, metrics)."""
+    step_idx) -> (params, opt_state, metrics).
+
+    Dispatches on the mesh's ``pipe``/``seq`` axes (see module docstring):
+    plain / CP / PP regimes all yield loss and parameter updates matching
+    the monolithic reference within fp32 tolerance (driver-verified)."""
     cfg = model.cfg
+    regime = parallel_regime(mesh, parallel)
+    _check_pp_cp_support(cfg, regime)
+    if regime == "pp" and parallel.sequence_parallel:
+        raise NotImplementedError(
+            "sequence_parallel is a GSPMD activation-layout knob and "
+            "cannot apply inside the PP regime's manual shard_map; "
+            "disable it for pp>1 sections")
     specs = model.specs()
     rules = rules if rules is not None else shd.rules_for(cfg, mesh)
     p_shard = shd.param_shardings(specs, mesh, rules)
@@ -98,43 +194,75 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
     lr_fn = lr_schedule or functools.partial(
         schedules.warmup_cosine, peak_lr=3e-4, warmup_steps=100,
         total_steps=10_000)
-    hook = _act_hook_for(mesh, shape.global_batch // n_micro, shape.seq_len,
-                         sequence_parallel=parallel.sequence_parallel)
     rep = shd.replicated(mesh)
 
-    def loss_fn(p, mb):
-        with cm.act_hook(hook):
-            return model.loss(p, mb)
+    if regime == "pp":
+        from repro.dist import pipeline as pl
+        # the staged loss microbatches internally with the same shard-major
+        # layout contract as _split_microbatches, and equals the monolithic
+        # full-batch loss (CE globally normalized, MoE aux exact)
+        pp_loss, _ = pl.build_pp_loss(
+            cfg, mesh, n_micro, impl=model.impl, remat=model.remat,
+            causal=(cfg.family != "vit"),
+            mb_layout=pl.contiguous_microbatch)
+        grad_fn = jax.value_and_grad(pp_loss)
 
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
-
-    def train_step(params, opt_state, batch, step_idx):
-        if n_micro == 1:
-            (loss, metrics), grads = grad_fn(params, batch)
+        def train_step(params, opt_state, batch, step_idx):
+            loss, grads = grad_fn(params, batch)
+            lr = lr_fn(step_idx)
+            new_params, new_opt, gnorm = adamw.update(grads, opt_state, lr,
+                                                      opt_cfg)
+            return new_params, new_opt, {"loss": loss.astype(jnp.float32),
+                                         "grad_norm": gnorm, "lr": lr}
+    else:
+        hook = _act_hook_for(mesh, shape.global_batch // n_micro,
+                             shape.seq_len,
+                             sequence_parallel=parallel.sequence_parallel)
+        if regime == "cp":
+            from repro.dist import context as cpx
+            cp_impl = cpx.cp_attention_impl(
+                mesh, batch_axes=shd.dp_axes(mesh) or None)
         else:
-            mbs_tree = _split_microbatches(batch, n_micro, dp_total)
+            cp_impl = None
 
-            def micro(carry, mb):
-                g_acc, l_acc = carry
-                (loss, _), grads = grad_fn(params, mb)
-                g_acc = jax.tree_util.tree_map(
-                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
-                return (g_acc, l_acc + loss), None
+        def loss_fn(p, mb):
+            impl_ctx = (att.attention_impl(cp_impl) if cp_impl is not None
+                        else contextlib.nullcontext())
+            with cm.act_hook(hook), impl_ctx:
+                return model.loss(p, mb)
 
-            g0 = jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape, jnp.float32), params)
-            (g_sum, l_sum), _ = jax.lax.scan(micro, (g0, jnp.float32(0)),
-                                             mbs_tree)
-            grads = jax.tree_util.tree_map(
-                lambda g, p: (g / n_micro).astype(p.dtype), g_sum, params)
-            loss = l_sum / n_micro
-            metrics = {}
-        lr = lr_fn(step_idx)
-        new_params, new_opt, gnorm = adamw.update(grads, opt_state, lr,
-                                                  opt_cfg)
-        out_metrics = {"loss": loss.astype(jnp.float32),
-                       "grad_norm": gnorm, "lr": lr}
-        return new_params, new_opt, out_metrics
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def train_step(params, opt_state, batch, step_idx):
+            if n_micro == 1:
+                (loss, metrics), grads = grad_fn(params, batch)
+            else:
+                mbs_tree = _split_microbatches(batch, n_micro, dp_total)
+
+                def micro(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, _), grads = grad_fn(params, mb)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc,
+                        grads)
+                    return (g_acc, l_acc + loss), None
+
+                g0 = jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                (g_sum, l_sum), _ = jax.lax.scan(micro,
+                                                 (g0, jnp.float32(0)),
+                                                 mbs_tree)
+                grads = jax.tree_util.tree_map(
+                    lambda g, p: (g / n_micro).astype(p.dtype), g_sum,
+                    params)
+                loss = l_sum / n_micro
+                metrics = {}
+            lr = lr_fn(step_idx)
+            new_params, new_opt, gnorm = adamw.update(grads, opt_state, lr,
+                                                      opt_cfg)
+            out_metrics = {"loss": loss.astype(jnp.float32),
+                           "grad_norm": gnorm, "lr": lr}
+            return new_params, new_opt, out_metrics
 
     step = jax.jit(
         train_step,
@@ -146,8 +274,18 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
     return step, shardings
 
 
+def _check_no_pp_cp_serving(mesh: Mesh, kind: str) -> None:
+    sizes = dict(mesh.shape)
+    if sizes.get(shd.AXIS_PIPE, 1) > 1 or sizes.get(shd.AXIS_SEQ, 1) > 1:
+        raise NotImplementedError(
+            f"{kind} cells do not support pipe/seq mesh axes > 1: serving "
+            "shards long contexts over the model axis instead "
+            "(kv_cache_spec flash-decoding split)")
+
+
 def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
                        rules=None):
+    _check_no_pp_cp_serving(mesh, "prefill")
     specs = model.specs()
     rules = rules if rules is not None else shd.rules_for(model.cfg, mesh)
     p_shard = shd.param_shardings(specs, mesh, rules)
@@ -172,6 +310,7 @@ def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
 def build_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
                       rules=None):
     """serve_step for decode cells: one new token against a seq_len cache."""
+    _check_no_pp_cp_serving(mesh, "decode")
     specs = model.specs()
     rules = rules if rules is not None else shd.rules_for(model.cfg, mesh)
     p_shard = shd.param_shardings(specs, mesh, rules)
