@@ -152,3 +152,65 @@ def fits(cfg: ArchConfig, parallel: ParallelConfig, seq_len: int, *,
          reserve: float = 0.9) -> bool:
     return memory_per_gpu(cfg, parallel, seq_len, trainable=trainable) \
         <= hw.hbm_bytes * reserve
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler 6-tuples (§3.4): cost-model durations per sample
+# --------------------------------------------------------------------------- #
+def sample_tuples(graph, activation: dict, seq_len: int, *,
+                  n: Optional[int] = None, num_microbatches: int = 8,
+                  hw: HardwareSpec = V5E):
+    """Per-sample ``Sample`` 6-tuples for a section graph, durations from
+    the analytic cost model — the executor feeds these to
+    ``schedule_global_batch`` to decide the *realized* dispatch order.
+
+    ``activation[name][i]`` — whether sample ``i`` activates section
+    ``name`` (data-dependent activation; omitted sections are always
+    active).  Sections upstream of the critical section contribute to the
+    ``bc`` phases (fwd before / bwd after the critical section), strict
+    downstream sections to ``ac``; a section's sequence length is
+    ``seq_len * seq_scale``."""
+    from repro.core.simulator import Sample
+
+    if n is None:
+        n = max((len(v) for v in activation.values()), default=0)
+    crit = graph.critical.name
+    # transitive closure: everything with a path INTO the critical
+    # section runs before it (a depth-2 producer still occupies the bc
+    # resource), everything else is strict-downstream
+    upstream = set()
+    frontier = [crit]
+    while frontier:
+        node = frontier.pop()
+        for e in graph.producers_of(node):
+            if e.src not in upstream:
+                upstream.add(e.src)
+                frontier.append(e.src)
+    costs = {}
+    for name, sec in graph.sections.items():
+        costs[name] = section_cost(
+            sec.arch, sec.parallel, max(int(seq_len * sec.seq_scale), 1),
+            trainable=sec.trainable, num_microbatches=num_microbatches,
+            hw=hw)
+
+    def active(name: str, i: int) -> bool:
+        acts = activation.get(name)
+        return True if acts is None else bool(acts[i])
+
+    out = []
+    for i in range(n):
+        f_bc = b_ac = f_ac = b_bc = 0.0
+        for name, sec in graph.sections.items():
+            if name == crit or not active(name, i):
+                continue
+            c = costs[name]
+            if name in upstream:
+                f_bc += c.t_fwd_sample
+                b_ac += c.t_bwd_sample
+            else:
+                f_ac += c.t_fwd_sample
+                b_bc += c.t_bwd_sample
+        cc = costs[crit]
+        out.append(Sample(i, f_bc, cc.t_fwd_sample, f_ac, b_bc,
+                          cc.t_bwd_sample, b_ac))
+    return out

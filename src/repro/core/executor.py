@@ -1,0 +1,290 @@
+"""Compound executor: runs a :class:`SectionGraph` end to end (§3.3–§3.4).
+
+This is the layer that turns the wavefront scheduler from a planning
+artifact into the thing that *executes* training:
+
+* each section runs its compiled steps on its own carved mesh from its
+  :class:`~repro.core.runtime.SectionWorker` thread;
+* cross-section tensors flow through the :class:`MessageQueue` — a
+  blocking ``pull`` *is* the cross-section data dependency, so dispatching
+  every task up front in schedule order is deadlock-free whenever the
+  per-section orders are mutually consistent (which the wavefront merge
+  guarantees: it only permutes samples, never inverts an edge);
+* the *dispatch order* per section comes from
+  :func:`repro.core.scheduler.schedule_global_batch` (cost-model
+  durations) — or FIFO when reordering is disabled — so reordering
+  actually happens at runtime, not just in the simulator;
+* every task's realized ``(start, end)`` wall time is recorded
+  (``jax.block_until_ready`` on the result before stamping ``end``), so
+  benches report *executed* makespan / section utilization rather than
+  simulated ones.
+
+Data-dependent activation is expressed by simply not emitting a dispatch:
+a sample (or microbatch) that does not activate a section produces no task
+for that section's worker — the dynamic path of MLLM training where
+text-only samples bypass the vision section entirely.
+"""
+from __future__ import annotations
+
+import queue as queue_mod
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import SectionGraph
+from repro.core.messages import MessageQueue
+from repro.core.runtime import SectionWorker, TaskError
+from repro.core.scheduler import (ScheduleResult, merge_fanout_schedules,
+                                  partition_global_batch,
+                                  wavefront_schedule)
+from repro.core.simulator import Sample
+
+
+@dataclass(frozen=True)
+class Dispatch:
+    """One unit of section work: ``fn`` runs on ``section``'s worker
+    thread; cross-section inputs/outputs move through the MessageQueue
+    inside ``fn`` (a blocking pull realizes the dependency edge)."""
+    section: str
+    tag: str
+    fn: Callable[[], Any]
+
+
+@dataclass(frozen=True)
+class TimelineEvent:
+    section: str
+    tag: str
+    start: float          # seconds since ExecutionResult.t0
+    end: float
+
+
+@dataclass
+class ExecutionResult:
+    """Realized execution of one dispatch list."""
+    results: Dict[Tuple[str, str], Any]
+    timeline: List[TimelineEvent]
+    t0: float
+    dispatch_order: Dict[str, List[str]]    # per-section submitted order
+
+    @property
+    def makespan(self) -> float:
+        if not self.timeline:
+            return 0.0
+        return max(e.end for e in self.timeline) - min(
+            e.start for e in self.timeline)
+
+    @property
+    def completion_order(self) -> List[Tuple[str, str]]:
+        return [(e.section, e.tag)
+                for e in sorted(self.timeline, key=lambda e: e.end)]
+
+    def section_events(self, section: str) -> List[TimelineEvent]:
+        return [e for e in self.timeline if e.section == section]
+
+    def busy(self, section: str) -> float:
+        return sum(e.end - e.start for e in self.section_events(section))
+
+    def utilization(self, section: str) -> float:
+        """Busy fraction of the section's realized span (first start →
+        last end) — the executed analogue of SimResult.critical_utilization
+        (idle inside the span = stalls the scheduler failed to hide)."""
+        ev = self.section_events(section)
+        if not ev:
+            return 1.0
+        span = max(e.end for e in ev) - min(e.start for e in ev)
+        return self.busy(section) / span if span > 0 else 1.0
+
+
+def _block(value):
+    """Force async dispatch to finish so task end-times are realized.
+    A failure surfacing here (async XLA error materializing at block
+    time) must propagate — the worker attaches it to THIS task instead
+    of silently returning a poisoned result."""
+    try:
+        import jax
+    except ImportError:                     # pragma: no cover
+        return value
+    jax.block_until_ready(value)
+    return value
+
+
+_task_local = threading.local()
+
+
+def mark_start():
+    """Re-stamp the current task's realized start time.
+
+    Call right after a blocking dependency wait (a MessageQueue pull) so
+    the stall is recorded as section *idle* rather than busy — without
+    this, a consumer that waits inside its task window reads ~100%
+    utilization no matter how badly the schedule stalls it."""
+    slot = getattr(_task_local, "slot", None)
+    if slot is not None:
+        slot["start"] = time.perf_counter()
+
+
+class CompoundExecutor:
+    """Generic section-graph executor over workers + message queue.
+
+    Construct from a :class:`~repro.core.runtime.MaestroRuntime` (shares
+    its workers/queue/meshes) or standalone from section names (tests /
+    host-side orchestration without carved meshes)."""
+
+    def __init__(self, graph: Optional[SectionGraph] = None, *,
+                 runtime=None, sections: Optional[Sequence[str]] = None,
+                 queue: Optional[MessageQueue] = None):
+        self.graph = graph if graph is not None else (
+            runtime.graph if runtime is not None else None)
+        if runtime is not None:
+            self.workers = runtime.workers
+            self.queue = runtime.queue
+            self._owns_workers = False
+        else:
+            names = list(sections if sections is not None
+                         else self.graph.sections)
+            self.workers = {n: SectionWorker(n) for n in names}
+            self.queue = queue if queue is not None else MessageQueue()
+            self._owns_workers = True
+        self._run_seq = 0
+
+    # ------------------------------------------------------------------ #
+    def run(self, dispatches: Sequence[Dispatch], *,
+            timeout: float = 300.0) -> ExecutionResult:
+        """Execute the dispatch list: per-section FIFO in list order,
+        sections concurrent, dependencies resolved by blocking queue
+        pulls inside the dispatch fns.  Returns the realized execution.
+        """
+        per_section: Dict[str, List[Dispatch]] = {}
+        for d in dispatches:
+            assert d.section in self.workers, d.section
+            per_section.setdefault(d.section, []).append(d)
+        for name, lst in per_section.items():
+            tags = [d.tag for d in lst]
+            assert len(set(tags)) == len(tags), \
+                f"duplicate dispatch tags for section {name}: {tags}"
+        timeline: List[TimelineEvent] = []
+        tl_lock = threading.Lock()
+        t0 = time.perf_counter()
+        # run-scoped tag namespace: if a previous run's drain raised
+        # mid-batch, its leftover results must not be mistaken for this
+        # run's (drain discards tags outside `expect`)
+        self._run_seq += 1
+        pre = f"r{self._run_seq}:"
+
+        def wrap(d: Dispatch):
+            def timed():
+                slot = {"start": time.perf_counter()}
+                _task_local.slot = slot
+                try:
+                    out = _block(d.fn())
+                finally:
+                    _task_local.slot = None
+                end = time.perf_counter() - t0
+                with tl_lock:
+                    timeline.append(TimelineEvent(
+                        d.section, d.tag, slot["start"] - t0, end))
+                return out
+            return timed
+
+        for name, lst in per_section.items():
+            for d in lst:
+                self.workers[name].submit(pre + d.tag, wrap(d))
+        # drain ALL sections concurrently (round-robin poll): a failure
+        # in any section must surface as that task's traceback, not as a
+        # timeout of some other section blocked on the dead dependency
+        expected = {name: {pre + d.tag for d in lst}
+                    for name, lst in per_section.items()}
+        outstanding = {name: set(tags) for name, tags in expected.items()}
+        results: Dict[Tuple[str, str], Any] = {}
+        end_time = time.monotonic() + timeout
+        while any(outstanding.values()):
+            progressed = False
+            for name, exp in outstanding.items():
+                w = self.workers[name]
+                while True:
+                    try:
+                        tag, val = w.results.get_nowait()
+                    except queue_mod.Empty:
+                        break
+                    if tag not in expected[name]:
+                        continue              # stale result; drop it
+                    if isinstance(val, TaskError):
+                        raise RuntimeError(
+                            f"section {name} task "
+                            f"{val.tag[len(pre):]!r} failed:\n"
+                            f"{val.traceback}")
+                    results[(name, tag[len(pre):])] = val
+                    exp.discard(tag)
+                    progressed = True
+            if not any(outstanding.values()):
+                break
+            if time.monotonic() > end_time:
+                left = {n: sorted(t[len(pre):] for t in e)
+                        for n, e in outstanding.items() if e}
+                raise TimeoutError(
+                    f"executor: tasks still outstanding after "
+                    f"{timeout}s: {left}")
+            if not progressed:
+                time.sleep(0.002)
+        timeline.sort(key=lambda e: (e.start, e.end))
+        return ExecutionResult(
+            results, timeline, t0,
+            {n: [d.tag for d in lst] for n, lst in per_section.items()})
+
+    def shutdown(self):
+        if self._owns_workers:
+            for w in self.workers.values():
+                w.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+
+# --------------------------------------------------------------------------- #
+# Schedule-driven dispatch order (Algorithm 1 at execution time)
+# --------------------------------------------------------------------------- #
+def order_samples(samples: Sequence[Sample], *, reorder: bool = True
+                  ) -> Tuple[List[int], Optional[ScheduleResult]]:
+    """The per-iteration sample dispatch order: wavefront (Algorithm 1 on
+    cost-model 6-tuples) when ``reorder``, else FIFO.  Returns the
+    permutation (original sample indices in dispatch order) and the
+    ScheduleResult (None for FIFO)."""
+    if not reorder:
+        return list(range(len(samples))), None
+    res = wavefront_schedule(samples)
+    return [s.idx for s in res.order], res
+
+
+def order_global_batch(samples: Sequence[Sample], dp: int, *,
+                       reorder: bool = True
+                       ) -> Tuple[List[List[int]], List[Tuple[int, int]]]:
+    """DP>1 composition: partition the global batch over ``dp`` consumer
+    ranks balancing activated-section load, Algorithm 1 per rank, fanout
+    merge for the shared producer.  Returns (per-rank sample orders, the
+    producer's merged ``(rank, sample_idx)`` order)."""
+    if not reorder:
+        n = len(samples)
+        assert n % dp == 0, (n, dp)
+        per = n // dp
+        ranks = [list(range(r * per, (r + 1) * per)) for r in range(dp)]
+        merged = merge_fanout_schedules(
+            [[samples[i] for i in rank] for rank in ranks])
+        return ranks, [(r, s.idx) for r, s in merged]
+    parts = partition_global_batch(samples, dp)
+    scheduled = [wavefront_schedule(p).order for p in parts]
+    merged = merge_fanout_schedules(scheduled)
+    return ([[s.idx for s in sched] for sched in scheduled],
+            [(r, s.idx) for r, s in merged])
+
+
+def chunk_microbatches(order: Sequence[int], mbs: int) -> List[List[int]]:
+    """Contiguous microbatches of the dispatch order (the executed
+    analogue of the shard-major microbatch layout: reordering decides
+    *which samples share a microbatch*)."""
+    assert len(order) % mbs == 0, (len(order), mbs)
+    return [list(order[i:i + mbs]) for i in range(0, len(order), mbs)]

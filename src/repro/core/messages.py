@@ -20,9 +20,9 @@ receiver's mesh/spec.
 """
 from __future__ import annotations
 
-import queue
 import threading
-from dataclasses import dataclass, field
+import time
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -44,10 +44,15 @@ class Meta:
 
 
 class _Channel:
-    """One (src_section → dst_section) point-to-point channel."""
+    """One (src_section → dst_section) point-to-point channel.
+
+    Metadata is indexed *per key* (``metas[key][frag_rank]``) so a ``pull``
+    wakeup inspects exactly its own key instead of rescanning every
+    buffered message — O(frag_count) per wakeup however deep the channel
+    backlog is."""
 
     def __init__(self):
-        self.meta_q: "queue.Queue[Meta]" = queue.Queue()
+        self.metas: Dict[str, Dict[int, Meta]] = {}
         self.data: Dict[Tuple[str, int], jax.Array] = {}
         self.lock = threading.Lock()
         self.cv = threading.Condition(self.lock)
@@ -88,7 +93,7 @@ class MessageQueue:
                     frag_count, seq)
         with ch.cv:
             ch.data[(key, frag_rank)] = value
-            ch.meta_q.put(meta)
+            ch.metas.setdefault(key, {})[frag_rank] = meta
             self.bytes_pushed += value.size * value.dtype.itemsize
             self.pushes += 1
             ch.cv.notify_all()
@@ -97,44 +102,36 @@ class MessageQueue:
     def pull(self, src: str, dst: str, key: str, *,
              sharding: Optional[NamedSharding] = None,
              timeout: Optional[float] = 30.0) -> jax.Array:
-        """Dequeue ``key``; gather all fragments; reshard to ``sharding``."""
+        """Dequeue ``key``; gather all fragments; reshard to ``sharding``.
+
+        Fragments that tile the global tensor contiguously along axis 0
+        (the common TP/DP handoff layout) are assembled *device-side* with
+        ``jnp.concatenate`` — no host ``np.zeros`` round-trip; arbitrary
+        fragment layouts keep the host-assembly fallback."""
         ch = self._channel(src, dst)
-        frags: Dict[int, jax.Array] = {}
-        metas: Dict[int, Meta] = {}
-        need = 1
-        deadline = None if timeout is None else (
-            threading.TIMEOUT_MAX if timeout < 0 else timeout)
+        # absolute deadline: wakeups for OTHER keys on the channel must
+        # not restart the clock (steady unrelated traffic would defer
+        # the timeout forever)
+        deadline = None if timeout is None or timeout < 0 else (
+            time.monotonic() + timeout)
         with ch.cv:
             while True:
-                for (k, r), v in list(ch.data.items()):
-                    if k == key and r not in frags:
-                        frags[r] = v
-                metas = {m.frag_rank: m for m in list(ch.meta_q.queue)
-                         if m.key == key}
-                if metas:
-                    need = next(iter(metas.values())).frag_count
-                if len(frags) >= need and len(metas) >= need:
-                    for r in list(frags):
-                        del ch.data[(key, r)]
-                    # drop consumed metadata
-                    kept = [m for m in ch.meta_q.queue if m.key != key]
-                    ch.meta_q.queue.clear()
-                    ch.meta_q.queue.extend(kept)
+                metas = ch.metas.get(key, {})
+                need = (next(iter(metas.values())).frag_count if metas
+                        else 1)
+                if len(metas) >= need:
+                    metas = dict(metas)
+                    frags = {r: ch.data.pop((key, r)) for r in metas}
+                    del ch.metas[key]
                     break
-                if not ch.cv.wait(timeout=deadline):
+                remaining = None if deadline is None else (
+                    deadline - time.monotonic())
+                if remaining is not None and remaining <= 0 or \
+                        not ch.cv.wait(timeout=remaining):
                     raise TimeoutError(
                         f"pull({src}->{dst}, {key}): "
-                        f"{len(frags)}/{need} fragments after {timeout}s")
-        if need == 1 and frags[0].shape == metas[0].global_shape:
-            out = frags[0]
-        else:
-            # assemble the global tensor from fragments on host
-            m0 = metas[min(metas)]
-            buf = np.zeros(m0.global_shape,
-                           jax.dtypes.canonicalize_dtype(m0.dtype))
-            for r, arr in frags.items():
-                buf[metas[r].frag_index] = np.asarray(arr)
-            out = jnp.asarray(buf)
+                        f"{len(metas)}/{need} fragments after {timeout}s")
+        out = _assemble(frags, metas)
         if sharding is not None:
             out = jax.device_put(out, sharding)
         return out
@@ -143,6 +140,54 @@ class MessageQueue:
     def stats(self) -> dict:
         return {"pushes": self.pushes, "bytes_pushed": self.bytes_pushed,
                 "channels": len(self._channels)}
+
+
+def _axis0_contiguous(metas: Dict[int, "Meta"]) -> Optional[List[int]]:
+    """Rank order in which the fragments tile the global tensor
+    contiguously along axis 0 (full slices elsewhere), or None."""
+    gshape = next(iter(metas.values())).global_shape
+    if not gshape:
+        return None
+    by_start = []
+    for r, m in metas.items():
+        idx = m.frag_index
+        if len(idx) != len(gshape):
+            return None
+        for d, sl in enumerate(idx[1:], start=1):
+            if (sl.start or 0) != 0 or sl.stop != gshape[d] \
+                    or sl.step not in (None, 1):
+                return None
+        sl0 = idx[0]
+        if sl0.step not in (None, 1):
+            return None
+        by_start.append((sl0.start or 0, sl0.stop, r))
+    by_start.sort()
+    pos = 0
+    order = []
+    for start, stop, r in by_start:
+        if start != pos:
+            return None
+        pos = stop
+        order.append(r)
+    return order if pos == gshape[0] else None
+
+
+def _assemble(frags: Dict[int, jax.Array], metas: Dict[int, "Meta"]):
+    m0 = next(iter(metas.values()))
+    if len(frags) == 1:
+        (r0, only), = frags.items()
+        if tuple(only.shape) == tuple(metas[r0].global_shape):
+            return only
+    order = _axis0_contiguous(metas)
+    if order is not None:
+        # device-side assembly: fragments stay jax.Arrays end to end
+        return jnp.concatenate([frags[r] for r in order], axis=0)
+    # fallback: arbitrary fragment layout assembled on host
+    buf = np.zeros(m0.global_shape,
+                   jax.dtypes.canonicalize_dtype(m0.dtype))
+    for r, arr in frags.items():
+        buf[metas[r].frag_index] = np.asarray(arr)
+    return jnp.asarray(buf)
 
 
 def reshard(value: jax.Array, mesh: Mesh, spec: PartitionSpec) -> jax.Array:

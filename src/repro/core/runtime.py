@@ -79,14 +79,26 @@ class Task:
     args: tuple
 
 
+@dataclass(frozen=True)
+class TaskError:
+    """Failure of ONE task: rides the result queue in that task's slot so a
+    single bad task no longer poisons every later ``drain`` with a stale
+    traceback."""
+    tag: str
+    traceback: str
+
+
 class SectionWorker:
-    """One worker thread per section; executes tasks FIFO."""
+    """One worker thread per section; executes tasks FIFO.
+
+    A failing task produces a :class:`TaskError` *result* (attached to the
+    failing tag); subsequent tasks keep executing and draining normally."""
 
     def __init__(self, name: str):
         self.name = name
         self.inbox: "queue.Queue[Optional[Task]]" = queue.Queue()
         self.results: "queue.Queue" = queue.Queue()
-        self.error: Optional[str] = None
+        self.error: Optional[str] = None        # last failure (diagnostics)
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=f"section-{name}")
         self._thread.start()
@@ -99,20 +111,35 @@ class SectionWorker:
             try:
                 out = task.fn(*task.args)
                 self.results.put((task.tag, out))
-            except Exception:                      # pragma: no cover
-                self.error = traceback.format_exc()
-                self.results.put((task.tag, None))
+            except Exception:
+                tb = traceback.format_exc()
+                self.error = tb
+                self.results.put((task.tag, TaskError(task.tag, tb)))
 
     def submit(self, tag: str, fn: Callable, *args) -> None:
         self.inbox.put(Task(tag, fn, args))
 
-    def drain(self, n: int, timeout: float = 120.0) -> Dict[str, Any]:
+    def drain(self, n: int, timeout: float = 120.0,
+              expect=None) -> Dict[str, Any]:
+        """Collect ``n`` results.  With ``expect`` (a set of tags),
+        results outside it are discarded instead of counted — stale
+        leftovers from an earlier batch whose drain raised mid-way must
+        not satisfy a later batch's count."""
+        exp = None if expect is None else set(expect)
         out = {}
-        for _ in range(n):
-            tag, val = self.results.get(timeout=timeout)
-            if self.error:
+        while len(out) < n:
+            try:
+                tag, val = self.results.get(timeout=timeout)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"section {self.name}: {n - len(out)}/{n} tasks still "
+                    f"outstanding after {timeout}s (got {sorted(out)})")
+            if exp is not None and tag not in exp:
+                continue                     # stale result; drop it
+            if isinstance(val, TaskError):
                 raise RuntimeError(
-                    f"section {self.name} failed:\n{self.error}")
+                    f"section {self.name} task {val.tag!r} failed:\n"
+                    f"{val.traceback}")
             out[tag] = val
         return out
 
@@ -150,6 +177,13 @@ class MaestroRuntime:
         return step_mod.build_train_step(model, self.meshes[section],
                                          self.parallels[section], shape,
                                          **kw)
+
+    def executor(self):
+        """A :class:`repro.core.executor.CompoundExecutor` over this
+        runtime's workers and message queue (lazy import: executor builds
+        on runtime, not the other way around)."""
+        from repro.core.executor import CompoundExecutor
+        return CompoundExecutor(graph=self.graph, runtime=self)
 
     def shutdown(self):
         for w in self.workers.values():

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import messages as msg
+from repro.core.executor import Dispatch, mark_start
 from repro.core.graph import SectionGraph, build_distill_graph
 from repro.core.runtime import MaestroRuntime
 from repro.core.types import ArchConfig, ParallelConfig, ShapeConfig
@@ -200,7 +201,14 @@ def build_colocated_step(t_cfg: ArchConfig, s_cfg: ArchConfig, mesh: Mesh,
 # --------------------------------------------------------------------------- #
 class DistillRuntime:
     """Teacher and student sections on disjoint meshes, hidden states
-    flowing through the M-to-N message queue with fan-out."""
+    flowing through the M-to-N message queue with fan-out.
+
+    Execution is an instantiation of the generic compound executor
+    (``repro.core.executor.CompoundExecutor``): the teacher's forward and
+    the student's step are Dispatches on the section workers, the
+    hidden-state handoff is a blocking MessageQueue pull, and every
+    iteration's realized timeline is kept on ``last_execution`` —
+    distillation and MLLM training share one execution engine."""
 
     def __init__(self, t_cfg: ArchConfig, s_cfg: ArchConfig, *,
                  teacher_parallel: ParallelConfig,
@@ -218,6 +226,8 @@ class DistillRuntime:
             teacher_parallel=teacher_parallel,
             student_parallel=student_parallel)
         self.rt = MaestroRuntime(self.graph, devices)
+        self.executor = self.rt.executor()
+        self.last_execution = None
         tm, sm = self.rt.mesh("teacher"), self.rt.mesh("student")
         _reject_pp(tm, "the teacher section")
         _reject_pp(sm, "the student section")
@@ -283,30 +293,50 @@ class DistillRuntime:
                               shd.replicated(self.rt.mesh("student")))
 
     def train_iteration(self, params_t, params_s, opt, batch, step_idx, *,
-                        w_t=None):
-        """One global-batch iteration: teacher fwd (its own mesh/worker) →
-        hidden-state push → student step. Returns (params_s, opt, metrics).
-        """
+                        w_t=None, timeout: float = 300.0):
+        """One global-batch iteration on the compound executor: teacher
+        fwd (its own mesh/worker) → hidden-state push → student pull +
+        step, both as executor Dispatches so the realized timeline is
+        recorded.  Returns (params_s, opt, metrics).
+
+        ``timeout`` bounds both the cross-section pull and the drain —
+        the pull now races the teacher's first-call jit compile, so it
+        must outlive it (the queue's 30s default does not)."""
         q = self.rt.queue
-        tw = self.rt.workers["teacher"]
         tm = self.rt.mesh("teacher")
         tokens_t = jax.device_put(batch["tokens"], shd.dp_sharding(tm))
-
-        def produce():
-            h = self.teacher_fwd(params_t, tokens_t)
-            q.push("teacher", "student", "h_t", h)
-            return True
-
-        tw.submit("h", produce)
-        tw.drain(1)
-        h_t = q.pull("teacher", "student", "h_t", sharding=self.h_shard)
         if w_t is None:
             w_t = self.teacher_unembed(params_t)
         sb = {k: jax.device_put(
             v, shd.dp_sharding(self.rt.mesh("student")))
             for k, v in batch.items()}
-        params_s, opt, metrics = self.student_step(params_s, opt, sb, h_t,
-                                                   w_t, jnp.int32(step_idx))
+        key = f"h_t/{int(step_idx)}"
+
+        def produce():
+            h = self.teacher_fwd(params_t, tokens_t)
+            q.push("teacher", "student", key, h)
+            # returning the array lets the executor block on it, so the
+            # teacher's timeline event covers the realized forward (and
+            # the teacher mesh is quiet when the task ends)
+            return h
+
+        def consume():
+            # the blocking pull IS the cross-section dependency: the
+            # student's first touch of h_t (and its jit trace) happens
+            # strictly after the teacher's push
+            h_t = q.pull("teacher", "student", key, sharding=self.h_shard,
+                         timeout=timeout)
+            mark_start()          # teacher wait is idle, not busy
+            return self.student_step(params_s, opt, sb, h_t, w_t,
+                                     jnp.int32(step_idx))
+
+        tag = f"step{int(step_idx)}"
+        res = self.executor.run([Dispatch("teacher", f"fwd{int(step_idx)}",
+                                          produce),
+                                 Dispatch("student", tag, consume)],
+                                timeout=timeout)
+        self.last_execution = res
+        params_s, opt, metrics = res.results[("student", tag)]
         return params_s, opt, metrics
 
     def shutdown(self):

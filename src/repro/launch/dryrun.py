@@ -65,17 +65,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
                           "§Arch-applicability)")
         return rec
 
-    mesh_env = os.environ.get("REPRO_DRYRUN_MESH")
-    if mesh_env:
-        # 2/3 dims: classic (pod,)data,model; 4/5 dims: the full section-
-        # mesh contract (pod,)data,pipe,seq,model (PP/CP dry-run cells)
-        dims = tuple(int(x) for x in mesh_env.split(","))
-        names = (("pod", "data", "pipe", "seq", "model") if len(dims) > 3
-                 else ("pod", "data", "model"))
-        axes = names[-len(dims):]
-        from repro.launch.mesh import make_mesh
-        mesh = make_mesh(dims, axes)
-    else:
+    from repro.launch.mesh import mesh_from_env
+    mesh = mesh_from_env()
+    if mesh is None:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
                                     pp=pp, cp=cp)
     n_dev = mesh.devices.size

@@ -4,12 +4,21 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
     + (" " + os.environ["XLA_FLAGS"] if "XLA_FLAGS" in os.environ else ""))
 
-"""Compound-workload dry-run: lower + compile the colocated distillation
-step (teacher fwd + student train with hidden-state handoff, §3.1) on the
-production mesh — the cell most representative of the paper's technique.
+"""Compound-workload dry-run: lower + compile a compound training cell on
+the production mesh — the cells most representative of the paper's
+technique.
+
+* ``--workload distill`` (default): the colocated distillation step
+  (teacher fwd + student train with hidden-state handoff, §3.1).
+* ``--workload mllm``: the colocated MLLM oracle step from
+  ``repro.mllm.workload`` — the single-jit formulation the disaggregated
+  executor runtime is bit-for-bit equivalent to (scan over microbatches,
+  ViT encode + LM loss with image-slot injection).
 
     PYTHONPATH=src python -m repro.launch.dryrun_compound \
-        [--teacher granite-3-8b --student granite-3-8b]
+        [--workload distill --teacher granite-3-8b --student granite-3-8b]
+    PYTHONPATH=src python -m repro.launch.dryrun_compound \
+        --workload mllm [--arch pixtral-12b]
 """
 import argparse
 import json
@@ -17,39 +26,51 @@ import time
 from pathlib import Path
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--teacher", default="granite-3-8b")
-    ap.add_argument("--student", default="granite-3-8b")
-    ap.add_argument("--seq", type=int, default=4096)
-    ap.add_argument("--batch", type=int, default=256)
-    ap.add_argument("--mbs", type=int, default=1)
-    ap.add_argument("--cp", type=int, default=1,
-                    help="context parallelism: carve a seq axis out of "
-                         "the data axis (teacher+student attention run "
-                         "through cp_attention)")
-    ap.add_argument("--out", default="experiments/dryrun")
-    args = ap.parse_args()
+def _emit(rec: dict, out_dir: str, name: str) -> None:
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / name).write_text(json.dumps(rec, indent=2))
+    print(json.dumps(rec["roofline"]))
+    print("useful:", rec["useful_flops_ratio"])
+    print("wrote", out / name)
 
+
+def _analyze(compiled, rec: dict, model_flops: float, n_devices: int):
+    from repro.roofline.analysis import analyze_hlo, roofline_terms
+    mem = compiled.memory_analysis()
+    rec["memory"] = {k: int(getattr(mem, k)) for k in
+                     ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes")}
+    stats = analyze_hlo(compiled.as_text())
+    rec["roofline"] = roofline_terms(stats)
+    rec["hlo"] = {"flops_per_device": stats.flops,
+                  "hbm_bytes_per_device": stats.hbm_bytes,
+                  "deep_loop_bytes_per_device": stats.deep_loop_bytes,
+                  "collective_bytes_per_device": stats.collective_bytes}
+    rec["model_flops"] = model_flops
+    rec["useful_flops_ratio"] = model_flops / max(
+        stats.flops * n_devices, 1)
+    return rec
+
+
+def _run_distill(args) -> None:
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config
-    from repro.core.types import ParallelConfig, ShapeConfig, V5E
+    from repro.core.types import ParallelConfig, ShapeConfig
     from repro.distill.workload import build_colocated_step
-    from repro.launch.dryrun import _analytic_kernel_io
     from repro.launch.mesh import make_production_mesh
     from repro.models import transformer as tf
     from repro.models.common import param_shapes
     from repro.optim import adamw
-    from repro.roofline.analysis import analyze_hlo, roofline_terms
 
     t_cfg = get_config(args.teacher)
     s_cfg = get_config(args.student)
     mesh = make_production_mesh(cp=args.cp)
     shape = ShapeConfig("distill", "train", args.seq, args.batch)
     step, _ = build_colocated_step(t_cfg, s_cfg, mesh, shape,
-                                   ParallelConfig(mbs=args.mbs,
+                                   ParallelConfig(mbs=args.mbs or 1,
                                                   cp=args.cp),
                                    impl="ref")
     t_shapes = param_shapes(tf.lm_specs(t_cfg))
@@ -67,29 +88,111 @@ def main() -> None:
         compiled = lowered.compile()
     rec = {"workload": f"distill:{args.teacher}->{args.student}",
            "mesh": "single", "compile_s": time.time() - t0}
-    mem = compiled.memory_analysis()
-    rec["memory"] = {k: int(getattr(mem, k)) for k in
-                     ("argument_size_in_bytes", "output_size_in_bytes",
-                      "temp_size_in_bytes", "alias_size_in_bytes")}
-    stats = analyze_hlo(compiled.as_text())
-    rec["roofline"] = roofline_terms(stats)
-    rec["hlo"] = {"flops_per_device": stats.flops,
-                  "hbm_bytes_per_device": stats.hbm_bytes,
-                  "deep_loop_bytes_per_device": stats.deep_loop_bytes,
-                  "collective_bytes_per_device": stats.collective_bytes}
-    # student train + teacher fwd model flops
     toks = args.batch * args.seq
-    rec["model_flops"] = (6 * s_cfg.active_params()
-                          + 2 * t_cfg.active_params()) * toks
-    rec["useful_flops_ratio"] = rec["model_flops"] / max(
-        stats.flops * mesh.devices.size, 1)
-    out = Path(args.out)
-    out.mkdir(parents=True, exist_ok=True)
-    name = f"compound_distill__{args.teacher}__{args.student}__single.json"
-    (out / name).write_text(json.dumps(rec, indent=2))
-    print(json.dumps(rec["roofline"]))
-    print("useful:", rec["useful_flops_ratio"])
-    print("wrote", out / name)
+    model_flops = (6 * s_cfg.active_params()
+                   + 2 * t_cfg.active_params()) * toks
+    _analyze(compiled, rec, model_flops, mesh.devices.size)
+    _emit(rec, args.out,
+          f"compound_distill__{args.teacher}__{args.student}__single.json")
+
+
+def _run_mllm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.mllm.workload import build_colocated_step
+    from repro.models import transformer as tf
+    from repro.models.common import param_shapes
+    from repro.models.vlm import vit_config, vit_specs
+    from repro.optim import adamw
+
+    lm_cfg = get_config(args.arch)
+    assert lm_cfg.vision_dim, f"{args.arch} is not a VLM arch"
+    seq, batch = args.seq, args.batch
+    tiny = bool(os.environ.get("REPRO_DRYRUN_TINY"))
+    if tiny:
+        lm_cfg = reduce_config(lm_cfg).replace(
+            vision_dim=64, max_image_tokens=8)
+        seq, batch = min(seq, 128), min(batch, 8)
+        vit_cfg = vit_config(num_layers=2, d_model=64, num_heads=4,
+                             d_ff=128, patch_dim=32, downsample=4,
+                             out_dim=lm_cfg.vision_dim)
+    else:
+        # the paper's 0.4B-class ViT encoder feeding the backbone
+        vit_cfg = vit_config(out_dim=lm_cfg.vision_dim)
+    mbs = args.mbs if args.mbs is not None else min(8, batch)
+    if batch % mbs:
+        raise ValueError(
+            f"--batch {batch} is not a multiple of mbs={mbs}: the "
+            "microbatched step would lower for a different sample count "
+            "than the reported model_flops")
+    n_mb = batch // mbs
+    K = lm_cfg.max_image_tokens or min(seq // 4, 2048)
+    lm_cfg = lm_cfg.replace(max_image_tokens=K)
+    from repro.launch.mesh import mesh_from_env
+    from repro.models.vlm import downsample_factor
+    P = K * downsample_factor(vit_cfg)
+    mesh = mesh_from_env() or make_production_mesh()
+    step, _ = build_colocated_step(vit_cfg, lm_cfg, mesh, mbs=mbs,
+                                   seq_len=seq, impl="ref")
+    p_shapes = {"lm": param_shapes(tf.lm_specs(lm_cfg)),
+                "vit": param_shapes(vit_specs(vit_cfg))}
+    o_shapes = adamw.state_specs(p_shapes)
+    i32, f32 = jnp.int32, jnp.float32
+    dt = jnp.bfloat16 if lm_cfg.dtype == "bfloat16" else jnp.float32
+    b_shapes = {
+        "tokens": jax.ShapeDtypeStruct((n_mb, mbs, seq), i32),
+        "labels": jax.ShapeDtypeStruct((n_mb, mbs, seq), i32),
+        "loss_mask": jax.ShapeDtypeStruct((n_mb, mbs, seq), f32),
+        "image_pos": jax.ShapeDtypeStruct((n_mb, mbs, K), i32),
+        "image_valid": jax.ShapeDtypeStruct((n_mb, mbs, K), i32),
+        "patches": jax.ShapeDtypeStruct((n_mb, mbs, P,
+                                         vit_cfg.frontend_dim), dt),
+        "vis_idx": jax.ShapeDtypeStruct((n_mb, mbs), i32),
+        "vis_valid": jax.ShapeDtypeStruct((n_mb, mbs), f32)}
+    t0 = time.time()
+    with mesh:
+        lowered = step.lower(p_shapes, o_shapes, b_shapes,
+                             jax.ShapeDtypeStruct((), i32))
+        compiled = lowered.compile()
+    rec = {"workload": f"mllm:{vit_cfg.name}->{args.arch}",
+           "mesh": "single", "compile_s": time.time() - t0,
+           "n_microbatches": n_mb, "mbs": mbs,
+           "image_tokens": K, "vit_patches": P}
+    toks = batch * seq
+    vit_toks = batch * P
+    model_flops = (6 * lm_cfg.active_params() * toks
+                   + 6 * vit_cfg.total_params() * vit_toks)
+    _analyze(compiled, rec, model_flops, mesh.devices.size)
+    _emit(rec, args.out,
+          f"compound_mllm__{vit_cfg.name}__{args.arch}__single.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="distill",
+                    choices=("distill", "mllm"))
+    ap.add_argument("--teacher", default="granite-3-8b")
+    ap.add_argument("--student", default="granite-3-8b")
+    ap.add_argument("--arch", default="pixtral-12b",
+                    help="mllm backbone arch (must have a vision stub)")
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--mbs", type=int, default=None,
+                    help="micro-batch size (default: 1 for distill, "
+                         "min(8, batch) for mllm)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context parallelism: carve a seq axis out of "
+                         "the data axis (teacher+student attention run "
+                         "through cp_attention; distill only)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.workload == "mllm":
+        _run_mllm(args)
+    else:
+        _run_distill(args)
 
 
 if __name__ == "__main__":

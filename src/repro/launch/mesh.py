@@ -31,6 +31,23 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def mesh_from_env(var: str = "REPRO_DRYRUN_MESH"):
+    """Mesh from a comma-separated dims env var, or None when unset.
+
+    2/3 dims map to the classic ``(pod,)data,model`` axes; 4/5 dims to
+    the full section-mesh contract ``(pod,)data,pipe,seq,model`` (the
+    PP/CP dry-run cells).  Single source of the env↔axis-name mapping
+    for every dry-run CLI."""
+    import os
+    spec = os.environ.get(var)
+    if not spec:
+        return None
+    dims = tuple(int(x) for x in spec.split(","))
+    names = (("pod", "data", "pipe", "seq", "model") if len(dims) > 3
+             else ("pod", "data", "model"))
+    return make_mesh(dims, names[-len(dims):])
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (virtual) devices this host exposes."""
     n = len(jax.devices())

@@ -1,0 +1,552 @@
+"""MLLM compound workload: ViT encoder section → LLM backbone section.
+
+The headline Maestro workload (§2.1/§4.1): modality sections activate
+*per sample* — text-only samples bypass the vision section entirely — and
+the wavefront scheduler reorders samples so the critical (LLM) section
+never stalls on vision work.  Two execution modes share one arithmetic:
+
+* :func:`build_colocated_step` — ONE jit: scan over microbatches, each
+  doing ViT-encode of its image samples (gathered to the static per-
+  microbatch capacity) + LM loss with image-slot injection, grads
+  accumulated in microbatch order.  This is the numerical oracle.
+* :class:`MLLMRuntime` — disaggregated on the compound executor: the ViT
+  section runs fwd/bwd tasks for *image-bearing microbatches only* on its
+  own carved mesh, embeddings / embedding-cotangents cross the
+  MessageQueue, and the per-iteration microbatch composition comes from
+  the wavefront dispatch order.
+
+Because both modes perform the same per-microbatch computations in the
+same order (the dynamic path only *skips* work whose contribution is an
+exact zero), the disaggregated per-step loss and grads match the
+colocated oracle bit-for-bit on equal section layouts — driver-verified
+on mixed and all-text batches (``tests/drivers/driver_mllm_runtime.py``).
+
+Static vs dynamic shapes: each microbatch has a *static* vision capacity
+(= its sample count); image samples are gathered into that capacity and
+zero-padded — padding only ever exists inside a microbatch.  Whether a
+microbatch dispatches vision work at all is dynamic (data-dependent
+activation).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cost_model as cmdl
+from repro.core.executor import Dispatch, mark_start, order_samples
+from repro.core.graph import build_vlm_graph
+from repro.core.runtime import MaestroRuntime
+from repro.core.scheduler import ScheduleResult
+from repro.core.types import ArchConfig, ParallelConfig
+from repro.dist import sharding as shd
+from repro.models import common as cm
+from repro.models import vlm
+from repro.models.model import Model, build_model
+from repro.optim import adamw, schedules
+from repro.train.step import _act_hook_for
+
+#: batch keys the LM step consumes (vision arrives as ``image_embeds``)
+LM_KEYS = ("tokens", "labels", "loss_mask", "image_pos", "image_valid")
+
+
+def _reject_pp_cp(parallel: ParallelConfig, what: str) -> None:
+    if parallel.pp > 1 or parallel.cp > 1:
+        raise NotImplementedError(
+            f"pp/cp for {what} is not wired through the MLLM runtime yet; "
+            "use dp/tp per section (ROADMAP open item)")
+
+
+# --------------------------------------------------------------------------- #
+# Shared per-microbatch arithmetic (oracle ≡ disaggregated, bit-for-bit)
+# --------------------------------------------------------------------------- #
+def vit_forward(pv, vit_cfg: ArchConfig, patches, valid, *,
+                impl: str = "ref", remat: bool = True):
+    """ViT-encode the gathered image samples of one microbatch and mask
+    padding rows.  patches [cap, P, pd], valid [cap] → emb [cap, K, Vd]."""
+    emb = vlm.vit_encode(pv, vit_cfg, patches, impl=impl, remat=remat)
+    return emb * valid[:, None, None].astype(emb.dtype)
+
+
+def lm_microbatch_loss(pl, model: Model, mb: dict, emb, vidx):
+    """LM loss of one microbatch: scatter the (masked) vision embeddings
+    back into per-sample image slots, then the backbone loss with
+    image-slot injection.  emb [cap, K, Vd], vidx [cap] local indices."""
+    mbs_n = mb["tokens"].shape[0]
+    img = jnp.zeros((mbs_n,) + emb.shape[1:], emb.dtype).at[vidx].add(emb)
+    lmb = {k: mb[k] for k in LM_KEYS if k in mb}
+    lmb["image_embeds"] = img
+    loss, _ = model.loss(pl, lmb)
+    return loss
+
+
+# --------------------------------------------------------------------------- #
+# Per-iteration plan: wavefront order → microbatch composition
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class IterationPlan:
+    """Host-side dispatch plan for one global batch."""
+    order: Tuple[int, ...]        # sample permutation (dispatch order)
+    mbs: int
+    n_mb: int
+    vis_idx: np.ndarray           # [n_mb, cap] local image-sample indices
+    vis_valid: np.ndarray         # [n_mb, cap] 1.0 for real image samples
+    image_mbs: Tuple[int, ...]    # microbatches that activate the ViT
+    schedule: Optional[ScheduleResult] = None
+
+
+def build_plan(order: Sequence[int], has_image: np.ndarray, mbs: int,
+               schedule: Optional[ScheduleResult] = None) -> IterationPlan:
+    n = len(order)
+    assert n % mbs == 0, (n, mbs)
+    n_mb = n // mbs
+    ordered_has = np.asarray(has_image).astype(bool)[list(order)]
+    vis_idx = np.zeros((n_mb, mbs), np.int32)
+    vis_valid = np.zeros((n_mb, mbs), np.float32)
+    image_mbs = []
+    for i in range(n_mb):
+        loc = np.where(ordered_has[i * mbs:(i + 1) * mbs])[0]
+        vis_idx[i, :len(loc)] = loc
+        vis_valid[i, :len(loc)] = 1.0
+        if len(loc):
+            image_mbs.append(i)
+    return IterationPlan(tuple(order), mbs, n_mb, vis_idx, vis_valid,
+                         tuple(image_mbs), schedule)
+
+
+def colocated_batch(batch: dict, plan: IterationPlan) -> dict:
+    """Lay one global batch out for the colocated oracle: permute into the
+    plan's dispatch order and pre-split into [n_mb, mbs, ...] so the
+    oracle's scan sees exactly the executor's microbatch composition."""
+    idx = list(plan.order)
+    out = {}
+    for k in LM_KEYS + ("patches",):
+        v = np.asarray(batch[k])[idx]
+        out[k] = jnp.asarray(
+            v.reshape((plan.n_mb, plan.mbs) + v.shape[1:]))
+    out["vis_idx"] = jnp.asarray(plan.vis_idx)
+    out["vis_valid"] = jnp.asarray(plan.vis_valid)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Colocated single-jit oracle
+# --------------------------------------------------------------------------- #
+def build_colocated_step(vit_cfg: ArchConfig, lm_cfg: ArchConfig,
+                         mesh: Mesh, *, mbs: int, seq_len: int,
+                         impl: str = "ref", lr_schedule=None,
+                         opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                         return_grads: bool = False):
+    """One jit over the pre-microbatched batch from
+    :func:`colocated_batch`: per microbatch, ViT fwd on the gathered image
+    samples + LM loss, per-microbatch joint grads accumulated in dispatch
+    order, one AdamW update.  Returns (step, shardings)."""
+    model = build_model(lm_cfg, impl=impl)
+    v_specs = vlm.vit_specs(vit_cfg)
+    l_specs = model.specs()
+    l_rules = shd.rules_for(lm_cfg, mesh)
+    v_rules = shd.rules_for(vit_cfg, mesh)
+    p_shard = {"lm": shd.param_shardings(l_specs, mesh, l_rules),
+               "vit": shd.param_shardings(v_specs, mesh, v_rules)}
+    ol = shd.opt_state_shardings(l_specs, mesh, l_rules)
+    ov = shd.opt_state_shardings(v_specs, mesh, v_rules)
+    o_shard = adamw.AdamWState(step=ol.step, mu={"lm": ol.mu, "vit": ov.mu},
+                               nu={"lm": ol.nu, "vit": ov.nu},
+                               master={"lm": ol.master, "vit": ov.master})
+    dp = shd.dp_axes(mesh) or None
+    rep = shd.replicated(mesh)
+
+    def mb_sharding(ndim):
+        return NamedSharding(mesh, P(None, dp, *([None] * (ndim - 2))))
+
+    b_shard = {"tokens": mb_sharding(3), "labels": mb_sharding(3),
+               "loss_mask": mb_sharding(3), "image_pos": mb_sharding(3),
+               "image_valid": mb_sharding(3), "patches": mb_sharding(4),
+               "vis_idx": rep, "vis_valid": rep}
+    hook = _act_hook_for(mesh, mbs, seq_len)
+    lr_fn = lr_schedule or functools.partial(schedules.constant,
+                                             peak_lr=1e-3)
+
+    def joint_loss(ps, mb, vidx, vval):
+        with cm.act_hook(hook):
+            sub = mb["patches"][vidx]
+            emb = vit_forward(ps["vit"], vit_cfg, sub, vval, impl=impl)
+            return lm_microbatch_loss(ps["lm"], model, mb, emb, vidx)
+
+    grad_fn = jax.value_and_grad(joint_loss)
+
+    def step(params, opt_state, batch, step_idx):
+        n_mb = batch["tokens"].shape[0]
+        mbs_tree = {k: batch[k] for k in LM_KEYS + ("patches",)}
+
+        def body(carry, xs):
+            g_acc, l_acc = carry
+            mb, vidx, vval = xs
+            loss, g = grad_fn(params, mb, vidx, vval)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (g_sum, l_sum), _ = jax.lax.scan(
+            body, (g0, jnp.float32(0)),
+            (mbs_tree, batch["vis_idx"], batch["vis_valid"]))
+        grads = jax.tree_util.tree_map(
+            lambda g, p: (g / n_mb).astype(p.dtype), g_sum, params)
+        loss = l_sum / n_mb
+        lr = lr_fn(step_idx)
+        new_p, new_opt, gnorm = adamw.update(grads, opt_state, lr, opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "lr": lr}
+        if return_grads:
+            metrics["grads"] = grads
+        return new_p, new_opt, metrics
+
+    out_metrics = {"loss": rep, "grad_norm": rep, "lr": rep}
+    if return_grads:
+        out_metrics["grads"] = p_shard
+    jitted = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard, rep),
+                     out_shardings=(p_shard, o_shard, out_metrics))
+    return jitted, {"params": p_shard, "opt": o_shard, "batch": b_shard}
+
+
+def init_compound_params(vit_cfg: ArchConfig, lm_cfg: ArchConfig, rng):
+    """Joint {vit, lm} params on the default device (place with
+    ``jax.device_put`` onto either the oracle mesh or section meshes)."""
+    model = build_model(lm_cfg)
+    r_v, r_l = jax.random.split(rng)
+    return {"vit": cm.init_params(vlm.vit_specs(vit_cfg), r_v),
+            "lm": cm.init_params(model.specs(), r_l)}
+
+
+# --------------------------------------------------------------------------- #
+# Disaggregated runtime on the compound executor
+# --------------------------------------------------------------------------- #
+class MLLMRuntime:
+    """ViT and LLM sections on disjoint carved meshes, driven by the
+    compound executor with wavefront-scheduled microbatch dispatch.
+
+    Per iteration: cost-model 6-tuples → ``wavefront_schedule`` (or FIFO)
+    → sample permutation → contiguous microbatches.  The ViT worker runs
+    fwd tasks for image-bearing microbatches (embeddings pushed through
+    the MessageQueue) and bwd tasks after the LM returns embedding
+    cotangents; the LM worker consumes every microbatch in dispatch
+    order.  All-text microbatches never touch the ViT section."""
+
+    def __init__(self, vit_cfg: ArchConfig, lm_cfg: ArchConfig, *,
+                 vit_parallel: ParallelConfig, lm_parallel: ParallelConfig,
+                 global_batch: int, seq_len: int, mbs: int,
+                 devices=None, impl: str = "ref", lr_schedule=None,
+                 opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+        _reject_pp_cp(vit_parallel, "the ViT section")
+        _reject_pp_cp(lm_parallel, "the LLM section")
+        assert global_batch % mbs == 0, (global_batch, mbs)
+        self.vit_cfg, self.lm_cfg = vit_cfg, lm_cfg
+        self.impl = impl
+        self.opt_cfg = opt_cfg
+        self.lr_fn = lr_schedule or functools.partial(schedules.constant,
+                                                      peak_lr=1e-3)
+        self.B, self.S, self.mbs = global_batch, seq_len, mbs
+        self.n_mb = global_batch // mbs
+        self.K = lm_cfg.max_image_tokens
+        self.Vd = lm_cfg.vision_dim
+        ds = vlm.downsample_factor(vit_cfg)
+        self.P = self.K * ds
+        self.pd = vit_cfg.frontend_dim
+
+        self.graph = build_vlm_graph(vit_cfg, lm_cfg,
+                                     vit_parallel=vit_parallel,
+                                     lm_parallel=lm_parallel)
+        # scheduler sees the ViT's true sequence (raw patches per sample)
+        self.graph.sections["vit"] = self.graph.sections["vit"].replace(
+            seq_scale=self.P / max(seq_len, 1))
+        self.rt = MaestroRuntime(self.graph, devices)
+        self.executor = self.rt.executor()
+        self.model = build_model(lm_cfg, impl=impl)
+        vm, lmesh = self.rt.mesh("vit"), self.rt.mesh("llm")
+
+        v_specs = vlm.vit_specs(vit_cfg)
+        l_specs = self.model.specs()
+        self.v_specs, self.l_specs = v_specs, l_specs
+        self.vp_shard = shd.param_shardings(
+            v_specs, vm, shd.rules_for(vit_cfg, vm))
+        self.lp_shard = shd.param_shardings(
+            l_specs, lmesh, shd.rules_for(lm_cfg, lmesh))
+        self.vo_shard = shd.opt_state_shardings(
+            v_specs, vm, shd.rules_for(vit_cfg, vm))
+        self.lo_shard = shd.opt_state_shardings(
+            l_specs, lmesh, shd.rules_for(lm_cfg, lmesh))
+        self._patch_shard = shd.dp_sharding(vm, 3)
+        self._valid_shard_v = shd.dp_sharding(vm, 1)
+        self._emb_shard_v = shd.dp_sharding(vm, 3)
+        self._emb_shard_l = shd.dp_sharding(lmesh, 3)
+        self._mb_shard = {k: shd.dp_sharding(lmesh, 2) for k in LM_KEYS}
+        rep_l = shd.replicated(lmesh)
+        v_hook = _act_hook_for(vm, mbs, self.P)
+        l_hook = _act_hook_for(lmesh, mbs, seq_len)
+
+        def vit_fwd(pv, patches, valid):
+            with cm.act_hook(v_hook):
+                return vit_forward(pv, vit_cfg, patches, valid, impl=impl)
+
+        def vit_bwd(pv, patches, valid, ct):
+            def fwd(p):
+                with cm.act_hook(v_hook):
+                    return vit_forward(p, vit_cfg, patches, valid,
+                                       impl=impl)
+            _, vjp = jax.vjp(fwd, pv)
+            return vjp(ct)[0]
+
+        def llm_grad(pl, mb, emb, vidx):
+            def loss_fn(p, e):
+                with cm.act_hook(l_hook):
+                    return lm_microbatch_loss(p, self.model, mb, e, vidx)
+            loss, (g_pl, g_emb) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))(pl, emb)
+            return loss, g_pl, g_emb
+
+        self._vit_fwd = jax.jit(
+            vit_fwd, in_shardings=(self.vp_shard, self._patch_shard,
+                                   self._valid_shard_v))
+        self._vit_bwd = jax.jit(
+            vit_bwd, in_shardings=(self.vp_shard, self._patch_shard,
+                                   self._valid_shard_v, self._emb_shard_v),
+            out_shardings=self.vp_shard)
+        self._llm_grad = jax.jit(
+            llm_grad, in_shardings=(self.lp_shard, self._mb_shard,
+                                    self._emb_shard_l, rep_l),
+            out_shardings=(rep_l, self.lp_shard, self._emb_shard_l))
+        # jitted per-section updates: the same fused elementwise program
+        # the colocated step runs (eager op-by-op AdamW rounds differently
+        # — no FMA fusion — and would drift an ulp per step)
+        def upd(g, st, lr, gn):
+            return adamw.update(g, st, lr, opt_cfg, gnorm=gn)
+
+        rep_v = shd.replicated(vm)
+        self._update_l = jax.jit(
+            upd, in_shardings=(self.lp_shard, self.lo_shard, rep_l, rep_l),
+            out_shardings=(self.lp_shard, self.lo_shard, rep_l))
+        self._update_v = jax.jit(
+            upd, in_shardings=(self.vp_shard, self.vo_shard, rep_v, rep_v),
+            out_shardings=(self.vp_shard, self.vo_shard, rep_v))
+
+        def ssq_vec(g):
+            return jnp.stack([jnp.sum(jnp.square(x.astype(jnp.float32)))
+                              for x in jax.tree_util.tree_leaves(g)])
+
+        # jitted per-leaf sums of squares: the same compiled square+sum
+        # subgraph the oracle's in-jit global_norm runs (eager op-by-op
+        # reduction rounds an ulp differently)
+        self._ssq_l = jax.jit(ssq_vec, in_shardings=(self.lp_shard,),
+                              out_shardings=rep_l)
+        self._ssq_v = jax.jit(ssq_vec, in_shardings=(self.vp_shard,),
+                              out_shardings=rep_v)
+        self._warmup()
+
+    # ------------------------------------------------------------------ #
+    def _warmup(self):
+        """Trace + compile every jit from the main thread: the act-hook
+        context is process-global, so concurrent first-call tracing from
+        two section workers would race."""
+        pv = jax.device_put(cm.init_params(self.v_specs,
+                                           jax.random.PRNGKey(0)),
+                            self.vp_shard)
+        pl = jax.device_put(cm.init_params(self.l_specs,
+                                           jax.random.PRNGKey(1)),
+                            self.lp_shard)
+        dt = jnp.float32 if self.vit_cfg.dtype == "float32" else jnp.bfloat16
+        patches = jnp.zeros((self.mbs, self.P, self.pd), dt)
+        valid = jnp.zeros((self.mbs,), jnp.float32)
+        emb = self._vit_fwd(pv, patches, valid)
+        self._vit_bwd(pv, patches, valid, emb)
+        mb = {"tokens": jnp.zeros((self.mbs, self.S), jnp.int32),
+              "labels": jnp.zeros((self.mbs, self.S), jnp.int32),
+              "loss_mask": jnp.ones((self.mbs, self.S), jnp.float32),
+              "image_pos": jnp.zeros((self.mbs, self.K), jnp.int32),
+              "image_valid": jnp.zeros((self.mbs, self.K), jnp.int32)}
+        self._llm_grad(pl, mb,
+                       jax.device_put(emb, self._emb_shard_l),
+                       jnp.arange(self.mbs, dtype=jnp.int32))
+        jax.block_until_ready(emb)
+
+    # ------------------------------------------------------------------ #
+    def init(self, rng):
+        params = init_compound_params(self.vit_cfg, self.lm_cfg, rng)
+        return self.place(params)
+
+    def place(self, params):
+        """Place a joint {vit, lm} param tree onto the section meshes and
+        build matching optimizer states."""
+        pv = jax.device_put(params["vit"], self.vp_shard)
+        pl = jax.device_put(params["lm"], self.lp_shard)
+        opts = {"vit": jax.device_put(adamw.init(pv), self.vo_shard),
+                "lm": jax.device_put(adamw.init(pl), self.lo_shard)}
+        return {"vit": pv, "lm": pl}, opts
+
+    def plan_iteration(self, has_image, *, reorder: bool = True
+                       ) -> IterationPlan:
+        has = np.asarray(has_image).astype(bool)
+        samples = cmdl.sample_tuples(self.graph, {"vit": has}, self.S,
+                                     n=len(has))
+        order, sched = order_samples(samples, reorder=reorder)
+        return build_plan(order, has, self.mbs, schedule=sched)
+
+    # ------------------------------------------------------------------ #
+    def train_iteration(self, params, opts, batch, step_idx, *,
+                        reorder: bool = True,
+                        plan: Optional[IterationPlan] = None,
+                        return_grads: bool = False,
+                        timeout: float = 300.0):
+        """One global-batch iteration through the executor.  Returns
+        (params, opts, metrics) with metrics carrying the realized
+        ExecutionResult (timeline, makespan, utilization) and the plan."""
+        host = {k: np.asarray(v) for k, v in batch.items()}
+        if plan is None:
+            plan = self.plan_iteration(host["has_image"], reorder=reorder)
+        idx = list(plan.order)
+        ordered = {k: v[idx] for k, v in host.items() if k != "has_image"}
+        n_mb, m = plan.n_mb, plan.mbs
+        image_set = set(plan.image_mbs)
+        pv, pl = params["vit"], params["lm"]
+        q = self.rt.queue
+        it = f"it{int(step_idx)}"
+        vit_ctx: Dict[int, tuple] = {}
+        vit_acc = {"g": None}
+        llm_acc = {"g": None, "loss": jnp.float32(0.0)}
+
+        def vit_fwd_task(i):
+            def fn():
+                rows = slice(i * m, (i + 1) * m)
+                sub = ordered["patches"][rows][plan.vis_idx[i]]
+                sub_d = jax.device_put(jnp.asarray(sub),
+                                       self._patch_shard)
+                vval = jax.device_put(jnp.asarray(plan.vis_valid[i]),
+                                      self._valid_shard_v)
+                emb = self._vit_fwd(pv, sub_d, vval)
+                vit_ctx[i] = (sub_d, vval)
+                q.push("vit", "llm", f"{it}/emb{i}", emb)
+                return emb
+            return fn
+
+        def vit_bwd_task(i):
+            def fn():
+                ct = q.pull("llm", "vit", f"{it}/demb{i}",
+                            sharding=self._emb_shard_v, timeout=timeout)
+                mark_start()      # the stall above is idle, not busy
+                sub_d, vval = vit_ctx.pop(i)
+                g = self._vit_bwd(pv, sub_d, vval, ct)
+                g0 = vit_acc["g"]
+                if g0 is None:
+                    # seed with f32 zeros like the oracle's scan carry —
+                    # seeding with the raw (param-dtype) grad would keep
+                    # a single-image-mb bf16 section accumulating in
+                    # bf16 and double-round the /n_mb normalization
+                    g0 = jax.tree_util.tree_map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), g)
+                vit_acc["g"] = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g0, g)
+                # block before finishing: the section mesh must be quiet
+                # when another thread (main: gnorm/update) launches its
+                # next collective program (XLA CPU rendezvous contract)
+                jax.block_until_ready(vit_acc["g"])
+                return True
+            return fn
+
+        def llm_task(i):
+            def fn():
+                if i in image_set:
+                    emb = q.pull("vit", "llm", f"{it}/emb{i}",
+                                 sharding=self._emb_shard_l,
+                                 timeout=timeout)
+                    mark_start()  # waiting on the ViT is a stall the
+                    #               scheduler should have hidden
+                else:
+                    # all-text microbatch: the ViT never runs; its
+                    # contribution is the exact zero the oracle computes
+                    emb = jax.device_put(
+                        jnp.zeros((m, self.K, self.Vd),
+                                  jnp.float32 if self.vit_cfg.dtype ==
+                                  "float32" else jnp.bfloat16),
+                        self._emb_shard_l)
+                rows = slice(i * m, (i + 1) * m)
+                mb = {k: jax.device_put(jnp.asarray(ordered[k][rows]),
+                                        self._mb_shard[k])
+                      for k in LM_KEYS}
+                vidx = jnp.asarray(plan.vis_idx[i])
+                loss, g_pl, g_emb = self._llm_grad(pl, mb, emb, vidx)
+                if i in image_set:
+                    q.push("llm", "vit", f"{it}/demb{i}", g_emb)
+                llm_acc["loss"] = llm_acc["loss"] + loss
+                g0 = llm_acc["g"]
+                if g0 is None:
+                    g0 = jax.tree_util.tree_map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), pl)
+                llm_acc["g"] = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g0, g_pl)
+                jax.block_until_ready((llm_acc["g"], llm_acc["loss"]))
+                return loss
+            return fn
+
+        dispatches: List[Dispatch] = []
+        for i in plan.image_mbs:
+            dispatches.append(Dispatch("vit", f"fwd{i}", vit_fwd_task(i)))
+        for i in range(n_mb):
+            dispatches.append(Dispatch("llm", f"mb{i}", llm_task(i)))
+        for i in plan.image_mbs:
+            dispatches.append(Dispatch("vit", f"bwd{i}", vit_bwd_task(i)))
+        execution = self.executor.run(dispatches, timeout=timeout)
+
+        # ---- finalize: accumulate → normalize → joint-norm AdamW ------
+        if vit_acc["g"] is None:        # all-text batch: exact-zero grads
+            vit_acc["g"] = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), pv)
+        g_lm = jax.tree_util.tree_map(
+            lambda g, p: (g / n_mb).astype(p.dtype), llm_acc["g"], pl)
+        g_vit = jax.tree_util.tree_map(
+            lambda g, p: (g / n_mb).astype(p.dtype), vit_acc["g"], pv)
+        loss = llm_acc["loss"] / n_mb
+        gnorm = self._joint_gnorm(g_lm, g_vit)
+        lr = self.lr_fn(jnp.int32(step_idx))
+        new_pl, new_ol, _ = self._update_l(g_lm, opts["lm"], lr, gnorm)
+        new_pv, new_ov, _ = self._update_v(g_vit, opts["vit"], lr, gnorm)
+        # synchronize the (async-dispatched, main-thread) update programs
+        # before returning: the next iteration's worker threads launch
+        # collective-bearing programs on the same section meshes, and XLA
+        # CPU deadlocks when two host threads interleave collective
+        # launches across one device set (rendezvous mismatch)
+        jax.block_until_ready((new_pl, new_ol, new_pv, new_ov))
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "lr": lr, "execution": execution, "plan": plan,
+                   "n_vit_tasks": 2 * len(plan.image_mbs)}
+        if return_grads:
+            metrics["grads"] = {"lm": g_lm, "vit": g_vit}
+        return ({"vit": new_pv, "lm": new_pl},
+                {"vit": new_ov, "lm": new_ol}, metrics)
+
+    def _joint_gnorm(self, g_lm, g_vit):
+        """Global grad norm across BOTH sections (the colocated semantics:
+        one clip threshold for the whole compound model), assembled from
+        per-section per-leaf sums of squares in joint-tree leaf order.
+        The leaves live on disjoint committed meshes, so they cannot be
+        stacked device-side — one batched ``device_get`` bridges them."""
+        lm_v, vit_v = jax.device_get(         # single batched sync
+            [self._ssq_l(g_lm), self._ssq_v(g_vit)])
+        return jnp.sqrt(jnp.sum(jnp.asarray(
+            np.concatenate([lm_v, vit_v]))))
+
+    def shutdown(self):
+        self.rt.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

@@ -51,10 +51,16 @@ def global_norm(tree) -> jnp.ndarray:
 
 
 def update(grads, state: AdamWState, lr: jnp.ndarray,
-           cfg: AdamWConfig = AdamWConfig(), param_dtype=jnp.bfloat16):
+           cfg: AdamWConfig = AdamWConfig(), param_dtype=jnp.bfloat16,
+           gnorm=None):
     """One AdamW step. Returns (new_params_in_param_dtype, new_state,
-    grad_norm)."""
-    gnorm = global_norm(grads)
+    grad_norm).
+
+    ``gnorm`` overrides the clip norm with a precomputed value — the
+    disaggregated runtimes pass the *joint* norm across all sections so
+    per-section updates clip exactly like one colocated update would."""
+    if gnorm is None:
+        gnorm = global_norm(grads)
     scale = jnp.where(gnorm > cfg.clip_norm, cfg.clip_norm / gnorm, 1.0) \
         if cfg.clip_norm > 0 else jnp.float32(1.0)
     step = state.step + 1

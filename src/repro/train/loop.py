@@ -93,7 +93,10 @@ def train(step_fn: Callable, *, params, opt_state, batches: Iterator,
     except ValueError:                       # non-main thread
         pass
 
-    step = start_step
+    # last *completed* step index; start_step - 1 ⇒ "no step ran yet", so
+    # the final save below never writes a spurious step past num_steps
+    # when the loop body never executes (e.g. resuming at num_steps)
+    step = start_step - 1
     try:
         for step in range(start_step, num_steps):
             batch = next(batches)
@@ -121,12 +124,14 @@ def train(step_fn: Callable, *, params, opt_state, batches: Iterator,
     except KeyboardInterrupt:                # pragma: no cover
         log_fn("interrupted — emergency checkpoint")
     finally:
-        if checkpointer is not None:
+        if checkpointer is not None and step >= start_step:
+            # only when at least one step actually ran: a zero-step run
+            # (resume at num_steps) must not write a num_steps+1 artifact
             checkpointer.save(step + 1, {"params": params,
                                          "opt": opt_state}, block=True)
             checkpointer.wait()
         if old is not None:
             signal.signal(signal.SIGTERM, old)
 
-    return TrainResult(len(losses), step + 1, losses, times, mon.flagged,
-                       resumed)
+    return TrainResult(len(losses), max(step + 1, start_step), losses,
+                       times, mon.flagged, resumed)

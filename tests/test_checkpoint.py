@@ -59,6 +59,38 @@ def test_restore_casts_dtype(tmp_path):
     assert got["w"].dtype == jnp.bfloat16
 
 
+def test_resume_at_num_steps_writes_no_spurious_checkpoint(tmp_path):
+    """Regression: the final-save in train()'s ``finally`` used to write
+    ``step + 1`` even when zero steps ran, so resuming a finished run
+    (latest == num_steps) left a spurious ``num_steps + 1`` artifact."""
+    from repro.train.loop import train
+
+    params = {"w": jnp.ones((2,), jnp.float32)}
+    opt = {"mu": jnp.zeros((2,), jnp.float32)}
+
+    def step_fn(p, o, batch, i):
+        return p, o, {"loss": jnp.float32(1.0)}
+
+    def batches():
+        while True:
+            yield {}
+
+    ck = Checkpointer(tmp_path, async_save=False)
+    res = train(step_fn, params=params, opt_state=opt, batches=batches(),
+                num_steps=3, checkpointer=ck, checkpoint_every=100,
+                log_fn=lambda s: None)
+    assert res.steps_run == 3 and res.final_step == 3
+    assert ck.latest_step() == 3
+
+    res2 = train(step_fn, params=params, opt_state=opt, batches=batches(),
+                 num_steps=3, checkpointer=ck, checkpoint_every=100,
+                 log_fn=lambda s: None)
+    assert res2.resumed_from == 3
+    assert res2.steps_run == 0
+    assert res2.final_step == 3           # not num_steps + 1
+    assert ck.all_steps() == [3], "no spurious num_steps+1 checkpoint"
+
+
 def test_missing_leaf_raises(tmp_path):
     ck = Checkpointer(tmp_path, async_save=False)
     ck.save(1, {"a": jnp.zeros(2)})

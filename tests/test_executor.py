@@ -1,0 +1,228 @@
+"""Executed-schedule invariants of the compound executor (single device,
+stub section programs — the multi-device MLLM/distill instantiations live
+in tests/drivers/).
+
+Covers the satellite checklist: realized completion order respects
+cross-section dependencies; dispatch equals FIFO when wavefront
+reordering is disabled; partition_global_batch / merge_fanout_schedules
+compose with the executor under dp>1 fanout; SectionWorker failures stay
+scoped to the failing task."""
+import time
+
+import pytest
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import (CompoundExecutor, Dispatch,
+                                 chunk_microbatches, mark_start,
+                                 order_global_batch, order_samples)
+from repro.core.runtime import SectionWorker
+from repro.core.simulator import Sample
+
+
+def hetero_samples(n=8):
+    """Alternating image/text mix (the MLLM regime): even samples carry
+    bc (vision) work, odd samples skip it."""
+    return [Sample(i, 0.4 if i % 2 == 0 else 0.0, 1.0, 0.0, 0.0, 2.0,
+                   0.8 if i % 2 == 0 else 0.0) for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch-order policies
+# --------------------------------------------------------------------------- #
+def test_order_samples_fifo_is_identity():
+    order, sched = order_samples(hetero_samples(), reorder=False)
+    assert order == list(range(8))
+    assert sched is None
+
+
+def test_order_samples_wavefront_reorders_and_never_loses():
+    s = hetero_samples()
+    order, sched = order_samples(s, reorder=True)
+    assert sorted(order) == list(range(8))
+    assert sched is not None
+    assert sched.makespan <= sched.fifo_makespan
+    assert order != list(range(8)), \
+        "a heterogeneous batch must actually be reordered"
+
+
+def test_sample_tuples_transitive_upstream():
+    """A depth-2 producer chain (adapter → vit → critical) must phase BOTH
+    producers as before-critical (bc), not flip the transitive one into
+    the after-critical phases."""
+    from repro.core.cost_model import sample_tuples
+    from repro.core.graph import SectionGraph
+    from repro.core.types import ArchConfig, ParallelConfig, SectionConfig
+
+    arch = ArchConfig("t", "dense", 2, 64, 4, 4, 128, 128)
+    g = SectionGraph()
+    g.add(SectionConfig("adapter", arch, ParallelConfig()))
+    g.add(SectionConfig("vit", arch, ParallelConfig()))
+    g.add(SectionConfig("llm", arch, ParallelConfig(), critical=True))
+    g.connect("adapter", "vit")
+    g.connect("vit", "llm")
+    g.validate()
+    s_on = sample_tuples(g, {"adapter": [True], "vit": [True]}, 64, n=1)[0]
+    assert s_on.t_f_ac == 0.0 and s_on.t_b_bc == 0.0
+    assert s_on.t_f_bc > 0.0 and s_on.t_b_ac > 0.0
+    # adapter alone still lands in bc
+    s_ad = sample_tuples(g, {"adapter": [True], "vit": [False]}, 64,
+                         n=1)[0]
+    assert s_ad.t_f_bc > 0.0 and s_ad.t_f_ac == 0.0
+    assert s_ad.t_f_bc < s_on.t_f_bc
+
+
+def test_chunk_microbatches_contiguous():
+    assert chunk_microbatches([3, 1, 0, 2], 2) == [[3, 1], [0, 2]]
+    with pytest.raises(AssertionError):
+        chunk_microbatches([0, 1, 2], 2)
+
+
+# --------------------------------------------------------------------------- #
+# Realized execution invariants
+# --------------------------------------------------------------------------- #
+def _producer_consumer_dispatches(ex, order, it="t"):
+    q = ex.queue
+    disp = []
+    for i in order:
+        def produce(i=i):
+            v = jnp.full((2,), i, jnp.float32)
+            q.push("bc", "c", f"{it}/x{i}", v)
+            return int(i)
+        disp.append(Dispatch("bc", f"p{i}", produce))
+    for i in order:
+        def consume(i=i):
+            v = q.pull("bc", "c", f"{it}/x{i}", timeout=30.0)
+            return float(np.asarray(v)[0])
+        disp.append(Dispatch("c", f"c{i}", consume))
+    return disp
+
+
+def test_completion_order_respects_cross_section_dependencies():
+    with CompoundExecutor(sections=["bc", "c"]) as ex:
+        order, _ = order_samples(hetero_samples(), reorder=True)
+        res = ex.run(_producer_consumer_dispatches(ex, order))
+        ends = {(e.section, e.tag): e.end for e in res.timeline}
+        for i in order:
+            # the consumer of sample i can only complete after its
+            # producer completed (the queue pull is the dependency)
+            assert ends[("bc", f"p{i}")] <= ends[("c", f"c{i}")]
+        # FIFO workers: realized critical completion order == its
+        # dispatch order == the wavefront schedule order
+        c_order = [t for s, t in res.completion_order if s == "c"]
+        assert c_order == [f"c{i}" for i in order]
+        for i in order:
+            assert res.results[("c", f"c{i}")] == float(i)
+        assert res.makespan > 0.0
+        assert 0.0 < res.utilization("c") <= 1.0
+
+
+def test_fifo_mode_realizes_incoming_order():
+    with CompoundExecutor(sections=["bc", "c"]) as ex:
+        order, sched = order_samples(hetero_samples(), reorder=False)
+        assert sched is None
+        res = ex.run(_producer_consumer_dispatches(ex, order, it="f"))
+        c_order = [t for s, t in res.completion_order if s == "c"]
+        assert c_order == [f"c{i}" for i in range(8)]
+        assert res.dispatch_order["c"] == [f"c{i}" for i in range(8)]
+
+
+def test_fanout_composition_with_executor():
+    """partition_global_batch → per-rank Algorithm 1 →
+    merge_fanout_schedules, executed: one producer section feeds two
+    consumer ranks; realized completion respects every dependency and
+    each rank consumes exactly its partition in schedule order."""
+    s = hetero_samples(8)
+    ranks, merged = order_global_batch(s, dp=2, reorder=True)
+    assert sorted(ranks[0] + ranks[1]) == list(range(8))
+    assert len(ranks[0]) == len(ranks[1]) == 4       # SPMD-equal counts
+    assert sorted(merged) == sorted(
+        (r, i) for r in range(2) for i in ranks[r])
+
+    with CompoundExecutor(sections=["vit", "c0", "c1"]) as ex:
+        q = ex.queue
+        disp = []
+        for r, i in merged:
+            def produce(r=r, i=i):
+                q.push("vit", f"c{r}", f"s{i}",
+                       jnp.full((2,), i, jnp.float32))
+                return i
+            disp.append(Dispatch("vit", f"p{r}.{i}", produce))
+        for r in range(2):
+            for i in ranks[r]:
+                def consume(r=r, i=i):
+                    v = q.pull("vit", f"c{r}", f"s{i}", timeout=30.0)
+                    return float(np.asarray(v)[0])
+                disp.append(Dispatch(f"c{r}", f"c{i}", consume))
+        res = ex.run(disp)
+        ends = {(e.section, e.tag): e.end for e in res.timeline}
+        for r, i in merged:
+            assert ends[("vit", f"p{r}.{i}")] <= ends[(f"c{r}", f"c{i}")]
+        for r in range(2):
+            got = [res.results[(f"c{r}", f"c{i}")] for i in ranks[r]]
+            assert got == [float(i) for i in ranks[r]]
+
+
+def test_utilization_excludes_marked_stalls():
+    """A consumer stalling in a blocking pull must read as section IDLE
+    (mark_start re-stamps the busy window), otherwise realized
+    utilization is ~1.0 no matter how badly the schedule stalls."""
+    with CompoundExecutor(sections=["bc", "c"]) as ex:
+        q = ex.queue
+
+        def slow_produce():
+            time.sleep(0.15)
+            q.push("bc", "c", "x", jnp.ones((2,)))
+            return True
+
+        def stalled_consume():
+            v = q.pull("bc", "c", "x", timeout=10.0)
+            mark_start()
+            time.sleep(0.02)
+            return float(np.asarray(v)[0])
+
+        res = ex.run([Dispatch("bc", "p", slow_produce),
+                      Dispatch("c", "c0", lambda: 1),
+                      Dispatch("c", "c1", stalled_consume)])
+        assert res.utilization("c") < 0.7
+        ev = {e.tag: e for e in res.section_events("c")}
+        assert ev["c1"].start >= 0.1    # start re-stamped after the pull
+
+
+def test_fanout_composition_fifo_mode():
+    s = hetero_samples(8)
+    ranks, merged = order_global_batch(s, dp=2, reorder=False)
+    assert ranks == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    # round-robin merged producer order over contiguous rank partitions
+    assert merged == [(0, 0), (1, 4), (0, 1), (1, 5), (0, 2), (1, 6),
+                      (0, 3), (1, 7)]
+
+
+# --------------------------------------------------------------------------- #
+# Worker failure scoping (satellite)
+# --------------------------------------------------------------------------- #
+def test_worker_error_scoped_to_failing_task():
+    w = SectionWorker("s")
+    try:
+        w.submit("bad", lambda: 1 / 0)
+        w.submit("good", lambda: 42)
+        with pytest.raises(RuntimeError, match=r"task 'bad'"):
+            w.drain(1)
+        # a later drain is NOT poisoned by the earlier failure
+        assert w.drain(1) == {"good": 42}
+    finally:
+        w.stop()
+
+
+def test_executor_raises_on_failing_dispatch():
+    with CompoundExecutor(sections=["a"]) as ex:
+        with pytest.raises(RuntimeError, match=r"boom"):
+            ex.run([Dispatch("a", "boom",
+                             lambda: (_ for _ in ()).throw(
+                                 ValueError("inner"))),
+                    Dispatch("a", "later", lambda: 1)])
+        # 'later' completed after the failed drain; its stale result must
+        # not satisfy (or pollute) the next run's drain
+        res = ex.run([Dispatch("a", "ok", lambda: 7)])
+        assert res.results == {("a", "ok"): 7}

@@ -31,6 +31,10 @@ def test_disaggregated_distill_runtime():
     _run("driver_distill_runtime.py")
 
 
+def test_disaggregated_mllm_runtime():
+    _run("driver_mllm_runtime.py")
+
+
 def test_pipeline_and_context_parallelism():
     _run("driver_pipeline_cp.py")
 
