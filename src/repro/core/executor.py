@@ -75,6 +75,13 @@ class ExecutionResult:
             e.start for e in self.timeline)
 
     @property
+    def task_counts(self) -> Dict[str, int]:
+        """Submitted tasks per section (dispatch-list view — includes
+        tasks whose realized events are still being merged)."""
+        return {name: len(tags)
+                for name, tags in self.dispatch_order.items()}
+
+    @property
     def completion_order(self) -> List[Tuple[str, str]]:
         return [(e.section, e.tag)
                 for e in sorted(self.timeline, key=lambda e: e.end)]

@@ -52,10 +52,17 @@ def carve_sections(graph: SectionGraph, devices: Optional[Sequence] = None,
     for name, sec in graph.sections.items():
         par = sec.parallel
         n = (gpu_counts or {}).get(name, par.devices)
-        assert off + n <= len(devices), (
-            f"need {off + n} devices, have {len(devices)}")
+        if off + n > len(devices):
+            raise ValueError(
+                f"section {name!r}: needs devices [{off}, {off + n}) but "
+                f"only {len(devices)} are available — shrink a section's "
+                "ParallelConfig or provide more devices")
         base = par.dp * par.pp * par.cp
-        assert n % base == 0, (name, n, base)
+        if n % base:
+            raise ValueError(
+                f"section {name!r}: {n} devices do not factor into "
+                f"dp×pp×cp={par.dp}×{par.pp}×{par.cp} (tp must be "
+                f"integral)")
         if n != par.devices:
             par = par.replace(tp=n // base)
         meshes[name] = section_mesh(devices[off:off + n], par, name)

@@ -45,6 +45,25 @@ def lm_batches(*, batch: int, seq_len: int, vocab: int, seed: int = 0
         }
 
 
+def routed_lm_batches(*, batch: int, seq_len: int, vocab: int,
+                      specialist_ratio: float = 0.3, seed: int = 0
+                      ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """LM batches with a per-sample ``domain`` flag (1 = specialist
+    domain): the data-dependent activation signal for multi-teacher
+    distillation — specialist-domain samples route to the second teacher
+    section, everything else bypasses it entirely."""
+    rng = np.random.default_rng(seed)
+    while True:
+        toks = _lm_ngram_tokens(rng, batch, seq_len, vocab)
+        domain = (rng.random(batch) < specialist_ratio).astype(np.int32)
+        yield {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+            "loss_mask": jnp.ones((batch, seq_len), jnp.float32),
+            "domain": jnp.asarray(domain),
+        }
+
+
 @dataclass
 class MultimodalSample:
     has_image: bool

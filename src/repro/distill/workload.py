@@ -23,16 +23,13 @@ from __future__ import annotations
 
 import contextlib
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import messages as msg
-from repro.core.executor import Dispatch, mark_start
-from repro.core.graph import SectionGraph, build_distill_graph
-from repro.core.runtime import MaestroRuntime
+from repro.core import workload as wl
 from repro.core.types import ArchConfig, ParallelConfig, ShapeConfig
 from repro.dist import context as cpx
 from repro.dist import sharding as shd
@@ -59,14 +56,6 @@ def _cp_ctx(mesh, *cfgs):
             mesh, batch_axes=shd.dp_axes(mesh) or None)
         return lambda: att.attention_impl(impl)
     return contextlib.nullcontext
-
-
-def _reject_pp(mesh, what: str) -> None:
-    if dict(mesh.shape).get(shd.AXIS_PIPE, 1) > 1:
-        raise NotImplementedError(
-            f"pipeline parallelism for {what} is not implemented (the "
-            "distillation loss tail — hidden-state KL — is not staged); "
-            "use dp/tp/cp for distill sections")
 
 
 def teacher_hidden(params_t, t_cfg: ArchConfig, tokens, *, impl="auto",
@@ -115,9 +104,14 @@ def build_colocated_step(t_cfg: ArchConfig, s_cfg: ArchConfig, mesh: Mesh,
     ``seq`` axis) runs both teacher and student attention through
     ``cp_attention``; ``pp > 1`` raises (no staged distill loss)."""
     from repro.train.step import (_act_hook_for, _split_microbatches,
-                                  num_microbatches, parallel_regime)
-    regime = parallel_regime(mesh, parallel)
-    _reject_pp(mesh, "the colocated distill step")
+                                  num_microbatches)
+    # consolidated section-parallelism validation (one path for every
+    # workload section, colocated or disaggregated): PP raises with the
+    # section + mesh axis named (the distill loss tail is not staged)
+    regime = wl.validate_section_parallel(
+        "distill.colocated(teacher)", t_cfg, parallel, mesh)
+    wl.validate_section_parallel(
+        "distill.colocated(student)", s_cfg, parallel, mesh)
     cp_ctx = (_cp_ctx(mesh, t_cfg, s_cfg) if regime == "cp"
               else contextlib.nullcontext)
     t_rules = shd.rules_for(t_cfg, mesh, teacher=True)
@@ -197,18 +191,61 @@ def build_colocated_step(t_cfg: ArchConfig, s_cfg: ArchConfig, mesh: Mesh,
 
 
 # --------------------------------------------------------------------------- #
-# Disaggregated runtime (paper-faithful)
+# Declarative workload spec + thin runtime wrapper (paper-faithful)
 # --------------------------------------------------------------------------- #
+def distill_spec(t_cfg: ArchConfig, s_cfg: ArchConfig, *,
+                 teacher_parallel: ParallelConfig,
+                 student_parallel: ParallelConfig,
+                 alpha: float = 0.5, temperature: float = 2.0,
+                 impl: str = "ref") -> wl.WorkloadSpec:
+    """KD as a declaration: a forward-only teacher section emitting final
+    hidden states, and the critical student section computing CE + KL
+    with the teacher's (colocated) output layer as a const.  Left
+    shape-polymorphic (no global_batch/seq_len): the generic runtime
+    binds shapes from the first batch, one microbatch per iteration."""
+    hidden = wl.Port("hidden", (wl.SEQ, t_cfg.d_model), t_cfg.dtype)
+
+    def teacher_fn(pt, x):
+        return {"hidden": teacher_hidden(pt, t_cfg, x["tokens"],
+                                         impl=impl)}
+
+    def student_fn(ps, x):
+        batch = {"tokens": x["tokens"], "labels": x["labels"],
+                 "loss_mask": x["loss_mask"]}
+        loss, met = distill_loss(
+            ps, s_cfg, batch, x["teacher.hidden"], x["w_t"], alpha=alpha,
+            temperature=temperature, impl=impl,
+            kl_impl="ref" if impl == "ref" else "auto")
+        return loss, {"ce": met["ce"], "kl": met["kl"]}
+
+    teacher = wl.SectionSpec(
+        "teacher", t_cfg, teacher_parallel, teacher_fn,
+        tf.lm_specs(t_cfg),
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        emits=(hidden,), mode="fwd_only")
+    student = wl.SectionSpec(
+        "student", s_cfg, student_parallel, student_fn,
+        tf.lm_specs(s_cfg),
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32"),
+                "labels": wl.Field((wl.SEQ,), "int32"),
+                "loss_mask": wl.Field((wl.SEQ,), "float32", fill=1.0)},
+        consumes=(wl.Consume("teacher", hidden),),
+        loss=True, loss_aux=True, critical=True,
+        consts={"w_t": wl.Field((t_cfg.d_model, t_cfg.padded_vocab),
+                                t_cfg.dtype)})
+    return wl.WorkloadSpec("distill", (teacher, student))
+
+
 class DistillRuntime:
     """Teacher and student sections on disjoint meshes, hidden states
     flowing through the M-to-N message queue with fan-out.
 
-    Execution is an instantiation of the generic compound executor
-    (``repro.core.executor.CompoundExecutor``): the teacher's forward and
-    the student's step are Dispatches on the section workers, the
-    hidden-state handoff is a blocking MessageQueue pull, and every
-    iteration's realized timeline is kept on ``last_execution`` —
-    distillation and MLLM training share one execution engine."""
+    Now a thin declaration over the generic
+    :class:`~repro.core.workload.CompoundRuntime` (``distill_spec``
+    above): the teacher's forward and the student's loss are plain
+    section fns; executor wiring, jitted AdamW, grad-norm and the
+    realized timeline are the shared machinery distillation and MLLM
+    training get from one place."""
 
     def __init__(self, t_cfg: ArchConfig, s_cfg: ArchConfig, *,
                  teacher_parallel: ParallelConfig,
@@ -221,70 +258,24 @@ class DistillRuntime:
         self.fanout = fanout
         self.t_cfg, self.s_cfg = t_cfg, s_cfg
         self.alpha, self.temperature = alpha, temperature
-        self.graph = build_distill_graph(
-            t_cfg, s_cfg, fanout=fanout,
-            teacher_parallel=teacher_parallel,
-            student_parallel=student_parallel)
-        self.rt = MaestroRuntime(self.graph, devices)
-        self.executor = self.rt.executor()
+        spec = distill_spec(t_cfg, s_cfg,
+                            teacher_parallel=teacher_parallel,
+                            student_parallel=student_parallel,
+                            alpha=alpha, temperature=temperature,
+                            impl=impl)
+        self._crt = wl.CompoundRuntime(
+            spec, devices=devices, impl=impl,
+            lr_schedule=functools.partial(schedules.constant,
+                                          peak_lr=lr))
+        self.rt = self._crt.rt
+        self.graph = self._crt.graph
+        self.executor = self._crt.executor
         self.last_execution = None
-        tm, sm = self.rt.mesh("teacher"), self.rt.mesh("student")
-        _reject_pp(tm, "the teacher section")
-        _reject_pp(sm, "the student section")
-        t_cp_ctx, s_cp_ctx = _cp_ctx(tm, t_cfg), _cp_ctx(sm, s_cfg)
-
-        t_rules = shd.rules_for(t_cfg, tm, teacher=True)
-        s_rules = shd.rules_for(s_cfg, sm)
-        self.t_specs = tf.lm_specs(t_cfg)
-        self.s_specs = tf.lm_specs(s_cfg)
-        self.tp_shard = shd.param_shardings(self.t_specs, tm, t_rules)
-        self.sp_shard = shd.param_shardings(self.s_specs, sm, s_rules)
-        self.o_shard = shd.opt_state_shardings(self.s_specs, sm, s_rules)
-        self.h_shard = shd.dp_sharding(sm, 3)      # [B, S, D_t] handoff
-
-        def teacher_fwd(params_t, tokens):
-            with t_cp_ctx():
-                return teacher_hidden(params_t, t_cfg, tokens, impl=impl)
-
-        def student_step(params_s, opt_state, batch, h_t, w_t, step_idx):
-            def loss_fn(p):
-                with s_cp_ctx():
-                    return distill_loss(p, s_cfg, batch, h_t, w_t,
-                                        alpha=alpha,
-                                        temperature=temperature,
-                                        impl=impl,
-                                        kl_impl="ref" if impl == "ref"
-                                        else "auto")
-            (loss, met), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params_s)
-            new_p, new_opt, gnorm = adamw.update(grads, opt_state,
-                                                 jnp.float32(lr))
-            return new_p, new_opt, {"loss": loss, "ce": met["ce"],
-                                    "kl": met["kl"], "grad_norm": gnorm}
-
-        self.teacher_fwd = jax.jit(
-            teacher_fwd,
-            in_shardings=(self.tp_shard, shd.dp_sharding(tm)))
-        rep_s = shd.replicated(sm)
-        batch_shard = {k: shd.dp_sharding(sm)
-                       for k in ("tokens", "labels", "loss_mask")}
-        self.student_step = jax.jit(
-            student_step, donate_argnums=(1,),
-            in_shardings=(self.sp_shard, self.o_shard, batch_shard,
-                          self.h_shard, rep_s, rep_s),
-            out_shardings=(self.sp_shard, self.o_shard,
-                           {"loss": rep_s, "ce": rep_s, "kl": rep_s,
-                            "grad_norm": rep_s}))
 
     # ------------------------------------------------------------------ #
     def init(self, rng) -> Tuple:
-        r1, r2 = jax.random.split(rng)
-        params_t = jax.device_put(cm.init_params(self.t_specs, r1),
-                                  self.tp_shard)
-        params_s = jax.device_put(cm.init_params(self.s_specs, r2),
-                                  self.sp_shard)
-        opt = jax.device_put(adamw.init(params_s), self.o_shard)
-        return params_t, params_s, opt
+        params, opts = self._crt.init(rng)
+        return params["teacher"], params["student"], opts["student"]
 
     def teacher_unembed(self, params_t):
         w = (params_t["embed"].T if self.t_cfg.tie_embeddings
@@ -296,48 +287,17 @@ class DistillRuntime:
                         w_t=None, timeout: float = 300.0):
         """One global-batch iteration on the compound executor: teacher
         fwd (its own mesh/worker) → hidden-state push → student pull +
-        step, both as executor Dispatches so the realized timeline is
-        recorded.  Returns (params_s, opt, metrics).
-
-        ``timeout`` bounds both the cross-section pull and the drain —
-        the pull now races the teacher's first-call jit compile, so it
-        must outlive it (the queue's 30s default does not)."""
-        q = self.rt.queue
-        tm = self.rt.mesh("teacher")
-        tokens_t = jax.device_put(batch["tokens"], shd.dp_sharding(tm))
+        loss/grads, wavefront-submitted Dispatches with the realized
+        timeline on ``last_execution``.  Returns (params_s, opt,
+        metrics)."""
         if w_t is None:
             w_t = self.teacher_unembed(params_t)
-        sb = {k: jax.device_put(
-            v, shd.dp_sharding(self.rt.mesh("student")))
-            for k, v in batch.items()}
-        key = f"h_t/{int(step_idx)}"
-
-        def produce():
-            h = self.teacher_fwd(params_t, tokens_t)
-            q.push("teacher", "student", key, h)
-            # returning the array lets the executor block on it, so the
-            # teacher's timeline event covers the realized forward (and
-            # the teacher mesh is quiet when the task ends)
-            return h
-
-        def consume():
-            # the blocking pull IS the cross-section dependency: the
-            # student's first touch of h_t (and its jit trace) happens
-            # strictly after the teacher's push
-            h_t = q.pull("teacher", "student", key, sharding=self.h_shard,
-                         timeout=timeout)
-            mark_start()          # teacher wait is idle, not busy
-            return self.student_step(params_s, opt, sb, h_t, w_t,
-                                     jnp.int32(step_idx))
-
-        tag = f"step{int(step_idx)}"
-        res = self.executor.run([Dispatch("teacher", f"fwd{int(step_idx)}",
-                                          produce),
-                                 Dispatch("student", tag, consume)],
-                                timeout=timeout)
-        self.last_execution = res
-        params_s, opt, metrics = res.results[("student", tag)]
-        return params_s, opt, metrics
+        params, opts, metrics = self._crt.train_iteration(
+            {"teacher": params_t, "student": params_s},
+            {"student": opt}, batch, step_idx,
+            consts={"student": {"w_t": w_t}}, timeout=timeout)
+        self.last_execution = metrics["execution"]
+        return params["student"], opts["student"], metrics
 
     def shutdown(self):
-        self.rt.shutdown()
+        self._crt.shutdown()

@@ -30,18 +30,14 @@ activation).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import cost_model as cmdl
-from repro.core.executor import Dispatch, mark_start, order_samples
-from repro.core.graph import build_vlm_graph
-from repro.core.runtime import MaestroRuntime
+from repro.core import workload as wl
 from repro.core.scheduler import ScheduleResult
 from repro.core.types import ArchConfig, ParallelConfig
 from repro.dist import sharding as shd
@@ -53,13 +49,6 @@ from repro.train.step import _act_hook_for
 
 #: batch keys the LM step consumes (vision arrives as ``image_embeds``)
 LM_KEYS = ("tokens", "labels", "loss_mask", "image_pos", "image_valid")
-
-
-def _reject_pp_cp(parallel: ParallelConfig, what: str) -> None:
-    if parallel.pp > 1 or parallel.cp > 1:
-        raise NotImplementedError(
-            f"pp/cp for {what} is not wired through the MLLM runtime yet; "
-            "use dp/tp per section (ROADMAP open item)")
 
 
 # --------------------------------------------------------------------------- #
@@ -88,35 +77,28 @@ def lm_microbatch_loss(pl, model: Model, mb: dict, emb, vidx):
 # --------------------------------------------------------------------------- #
 # Per-iteration plan: wavefront order → microbatch composition
 # --------------------------------------------------------------------------- #
-@dataclass(frozen=True)
-class IterationPlan:
-    """Host-side dispatch plan for one global batch."""
-    order: Tuple[int, ...]        # sample permutation (dispatch order)
-    mbs: int
-    n_mb: int
-    vis_idx: np.ndarray           # [n_mb, cap] local image-sample indices
-    vis_valid: np.ndarray         # [n_mb, cap] 1.0 for real image samples
-    image_mbs: Tuple[int, ...]    # microbatches that activate the ViT
-    schedule: Optional[ScheduleResult] = None
+class IterationPlan(wl.IterationPlan):
+    """The generic :class:`repro.core.workload.IterationPlan` with the
+    MLLM-historical accessors (the ViT is the one activated section)."""
+
+    @property
+    def image_mbs(self):
+        return self.activation["vit"].active_mbs
+
+    @property
+    def vis_idx(self):
+        return self.activation["vit"].idx
+
+    @property
+    def vis_valid(self):
+        return self.activation["vit"].valid
 
 
 def build_plan(order: Sequence[int], has_image: np.ndarray, mbs: int,
                schedule: Optional[ScheduleResult] = None) -> IterationPlan:
-    n = len(order)
-    assert n % mbs == 0, (n, mbs)
-    n_mb = n // mbs
-    ordered_has = np.asarray(has_image).astype(bool)[list(order)]
-    vis_idx = np.zeros((n_mb, mbs), np.int32)
-    vis_valid = np.zeros((n_mb, mbs), np.float32)
-    image_mbs = []
-    for i in range(n_mb):
-        loc = np.where(ordered_has[i * mbs:(i + 1) * mbs])[0]
-        vis_idx[i, :len(loc)] = loc
-        vis_valid[i, :len(loc)] = 1.0
-        if len(loc):
-            image_mbs.append(i)
-    return IterationPlan(tuple(order), mbs, n_mb, vis_idx, vis_valid,
-                         tuple(image_mbs), schedule)
+    act = wl.build_activation(order, has_image, mbs)
+    return IterationPlan(tuple(order), mbs, len(order) // mbs,
+                         {"vit": act}, schedule)
 
 
 def colocated_batch(batch: dict, plan: IterationPlan) -> dict:
@@ -227,154 +209,88 @@ def init_compound_params(vit_cfg: ArchConfig, lm_cfg: ArchConfig, rng):
 
 
 # --------------------------------------------------------------------------- #
-# Disaggregated runtime on the compound executor
+# Declarative workload spec + thin runtime wrapper
 # --------------------------------------------------------------------------- #
+def mllm_spec(vit_cfg: ArchConfig, lm_cfg: ArchConfig, *,
+              vit_parallel: ParallelConfig, lm_parallel: ParallelConfig,
+              global_batch: int, seq_len: int, mbs: int,
+              impl: str = "ref") -> wl.WorkloadSpec:
+    """The MLLM workload as a declaration: a data-dependent ViT section
+    emitting per-microbatch vision embeddings, and the critical LM
+    section scattering them into image slots.  Everything else — carved
+    meshes, jits, AdamW, joint grad-norm, wavefront dispatch — is the
+    generic :class:`repro.core.workload.CompoundRuntime`."""
+    model = build_model(lm_cfg, impl=impl)
+    K, Vd = lm_cfg.max_image_tokens, lm_cfg.vision_dim
+    P = K * vlm.downsample_factor(vit_cfg)
+    pd = vit_cfg.frontend_dim
+    emb = wl.Port("emb", (K, Vd), vit_cfg.dtype)
+
+    def vit_fn(pv, x):
+        return {"emb": vit_forward(pv, vit_cfg, x["patches"],
+                                   x["act_valid"], impl=impl)}
+
+    def llm_fn(pl, x):
+        mb = {k: x[k] for k in LM_KEYS}
+        return lm_microbatch_loss(pl, model, mb, x["vit.emb"],
+                                  x["vit.act_idx"])
+
+    vit = wl.SectionSpec(
+        "vit", vit_cfg, vit_parallel, vit_fn, vlm.vit_specs(vit_cfg),
+        inputs={"patches": wl.Field((P, pd), vit_cfg.dtype)},
+        emits=(emb,),
+        activation=lambda b: np.asarray(b["has_image"]).astype(bool),
+        seq_len=P)
+    llm = wl.SectionSpec(
+        "llm", lm_cfg, lm_parallel, llm_fn, model.specs(),
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32"),
+                "labels": wl.Field((wl.SEQ,), "int32"),
+                "loss_mask": wl.Field((wl.SEQ,), "float32", fill=1.0),
+                "image_pos": wl.Field((K,), "int32"),
+                "image_valid": wl.Field((K,), "int32")},
+        consumes=(wl.Consume("vit", emb),),
+        loss=True, critical=True)
+    return wl.WorkloadSpec("mllm", (vit, llm), seq_len=seq_len,
+                           global_batch=global_batch, mbs=mbs)
+
+
 class MLLMRuntime:
     """ViT and LLM sections on disjoint carved meshes, driven by the
-    compound executor with wavefront-scheduled microbatch dispatch.
-
-    Per iteration: cost-model 6-tuples → ``wavefront_schedule`` (or FIFO)
-    → sample permutation → contiguous microbatches.  The ViT worker runs
-    fwd tasks for image-bearing microbatches (embeddings pushed through
-    the MessageQueue) and bwd tasks after the LM returns embedding
-    cotangents; the LM worker consumes every microbatch in dispatch
-    order.  All-text microbatches never touch the ViT section."""
+    generic :class:`~repro.core.workload.CompoundRuntime` — this class is
+    now only the historical parameter/metric surface (params keyed
+    ``{"vit", "lm"}``, ``n_vit_tasks``, the MLLM ``IterationPlan``) over
+    the declarative spec above.  Section parallelism goes through the
+    consolidated ``validate_section_parallel`` path, so dp/tp *and* CP
+    configs (the paper gives the ViT's long patch sequences to CP) run
+    through the executor; only PP still raises."""
 
     def __init__(self, vit_cfg: ArchConfig, lm_cfg: ArchConfig, *,
                  vit_parallel: ParallelConfig, lm_parallel: ParallelConfig,
                  global_batch: int, seq_len: int, mbs: int,
                  devices=None, impl: str = "ref", lr_schedule=None,
                  opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
-        _reject_pp_cp(vit_parallel, "the ViT section")
-        _reject_pp_cp(lm_parallel, "the LLM section")
         assert global_batch % mbs == 0, (global_batch, mbs)
         self.vit_cfg, self.lm_cfg = vit_cfg, lm_cfg
         self.impl = impl
         self.opt_cfg = opt_cfg
-        self.lr_fn = lr_schedule or functools.partial(schedules.constant,
-                                                      peak_lr=1e-3)
         self.B, self.S, self.mbs = global_batch, seq_len, mbs
         self.n_mb = global_batch // mbs
         self.K = lm_cfg.max_image_tokens
         self.Vd = lm_cfg.vision_dim
-        ds = vlm.downsample_factor(vit_cfg)
-        self.P = self.K * ds
+        self.P = self.K * vlm.downsample_factor(vit_cfg)
         self.pd = vit_cfg.frontend_dim
-
-        self.graph = build_vlm_graph(vit_cfg, lm_cfg,
-                                     vit_parallel=vit_parallel,
-                                     lm_parallel=lm_parallel)
-        # scheduler sees the ViT's true sequence (raw patches per sample)
-        self.graph.sections["vit"] = self.graph.sections["vit"].replace(
-            seq_scale=self.P / max(seq_len, 1))
-        self.rt = MaestroRuntime(self.graph, devices)
-        self.executor = self.rt.executor()
-        self.model = build_model(lm_cfg, impl=impl)
-        vm, lmesh = self.rt.mesh("vit"), self.rt.mesh("llm")
-
-        v_specs = vlm.vit_specs(vit_cfg)
-        l_specs = self.model.specs()
-        self.v_specs, self.l_specs = v_specs, l_specs
-        self.vp_shard = shd.param_shardings(
-            v_specs, vm, shd.rules_for(vit_cfg, vm))
-        self.lp_shard = shd.param_shardings(
-            l_specs, lmesh, shd.rules_for(lm_cfg, lmesh))
-        self.vo_shard = shd.opt_state_shardings(
-            v_specs, vm, shd.rules_for(vit_cfg, vm))
-        self.lo_shard = shd.opt_state_shardings(
-            l_specs, lmesh, shd.rules_for(lm_cfg, lmesh))
-        self._patch_shard = shd.dp_sharding(vm, 3)
-        self._valid_shard_v = shd.dp_sharding(vm, 1)
-        self._emb_shard_v = shd.dp_sharding(vm, 3)
-        self._emb_shard_l = shd.dp_sharding(lmesh, 3)
-        self._mb_shard = {k: shd.dp_sharding(lmesh, 2) for k in LM_KEYS}
-        rep_l = shd.replicated(lmesh)
-        v_hook = _act_hook_for(vm, mbs, self.P)
-        l_hook = _act_hook_for(lmesh, mbs, seq_len)
-
-        def vit_fwd(pv, patches, valid):
-            with cm.act_hook(v_hook):
-                return vit_forward(pv, vit_cfg, patches, valid, impl=impl)
-
-        def vit_bwd(pv, patches, valid, ct):
-            def fwd(p):
-                with cm.act_hook(v_hook):
-                    return vit_forward(p, vit_cfg, patches, valid,
-                                       impl=impl)
-            _, vjp = jax.vjp(fwd, pv)
-            return vjp(ct)[0]
-
-        def llm_grad(pl, mb, emb, vidx):
-            def loss_fn(p, e):
-                with cm.act_hook(l_hook):
-                    return lm_microbatch_loss(p, self.model, mb, e, vidx)
-            loss, (g_pl, g_emb) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1))(pl, emb)
-            return loss, g_pl, g_emb
-
-        self._vit_fwd = jax.jit(
-            vit_fwd, in_shardings=(self.vp_shard, self._patch_shard,
-                                   self._valid_shard_v))
-        self._vit_bwd = jax.jit(
-            vit_bwd, in_shardings=(self.vp_shard, self._patch_shard,
-                                   self._valid_shard_v, self._emb_shard_v),
-            out_shardings=self.vp_shard)
-        self._llm_grad = jax.jit(
-            llm_grad, in_shardings=(self.lp_shard, self._mb_shard,
-                                    self._emb_shard_l, rep_l),
-            out_shardings=(rep_l, self.lp_shard, self._emb_shard_l))
-        # jitted per-section updates: the same fused elementwise program
-        # the colocated step runs (eager op-by-op AdamW rounds differently
-        # — no FMA fusion — and would drift an ulp per step)
-        def upd(g, st, lr, gn):
-            return adamw.update(g, st, lr, opt_cfg, gnorm=gn)
-
-        rep_v = shd.replicated(vm)
-        self._update_l = jax.jit(
-            upd, in_shardings=(self.lp_shard, self.lo_shard, rep_l, rep_l),
-            out_shardings=(self.lp_shard, self.lo_shard, rep_l))
-        self._update_v = jax.jit(
-            upd, in_shardings=(self.vp_shard, self.vo_shard, rep_v, rep_v),
-            out_shardings=(self.vp_shard, self.vo_shard, rep_v))
-
-        def ssq_vec(g):
-            return jnp.stack([jnp.sum(jnp.square(x.astype(jnp.float32)))
-                              for x in jax.tree_util.tree_leaves(g)])
-
-        # jitted per-leaf sums of squares: the same compiled square+sum
-        # subgraph the oracle's in-jit global_norm runs (eager op-by-op
-        # reduction rounds an ulp differently)
-        self._ssq_l = jax.jit(ssq_vec, in_shardings=(self.lp_shard,),
-                              out_shardings=rep_l)
-        self._ssq_v = jax.jit(ssq_vec, in_shardings=(self.vp_shard,),
-                              out_shardings=rep_v)
-        self._warmup()
-
-    # ------------------------------------------------------------------ #
-    def _warmup(self):
-        """Trace + compile every jit from the main thread: the act-hook
-        context is process-global, so concurrent first-call tracing from
-        two section workers would race."""
-        pv = jax.device_put(cm.init_params(self.v_specs,
-                                           jax.random.PRNGKey(0)),
-                            self.vp_shard)
-        pl = jax.device_put(cm.init_params(self.l_specs,
-                                           jax.random.PRNGKey(1)),
-                            self.lp_shard)
-        dt = jnp.float32 if self.vit_cfg.dtype == "float32" else jnp.bfloat16
-        patches = jnp.zeros((self.mbs, self.P, self.pd), dt)
-        valid = jnp.zeros((self.mbs,), jnp.float32)
-        emb = self._vit_fwd(pv, patches, valid)
-        self._vit_bwd(pv, patches, valid, emb)
-        mb = {"tokens": jnp.zeros((self.mbs, self.S), jnp.int32),
-              "labels": jnp.zeros((self.mbs, self.S), jnp.int32),
-              "loss_mask": jnp.ones((self.mbs, self.S), jnp.float32),
-              "image_pos": jnp.zeros((self.mbs, self.K), jnp.int32),
-              "image_valid": jnp.zeros((self.mbs, self.K), jnp.int32)}
-        self._llm_grad(pl, mb,
-                       jax.device_put(emb, self._emb_shard_l),
-                       jnp.arange(self.mbs, dtype=jnp.int32))
-        jax.block_until_ready(emb)
+        spec = mllm_spec(vit_cfg, lm_cfg, vit_parallel=vit_parallel,
+                         lm_parallel=lm_parallel,
+                         global_batch=global_batch, seq_len=seq_len,
+                         mbs=mbs, impl=impl)
+        self._crt = wl.CompoundRuntime(
+            spec, devices=devices, impl=impl,
+            lr_schedule=lr_schedule or functools.partial(
+                schedules.constant, peak_lr=1e-3),
+            opt_cfg=opt_cfg)
+        self.rt = self._crt.rt
+        self.executor = self._crt.executor
+        self.graph = self._crt.graph
 
     # ------------------------------------------------------------------ #
     def init(self, rng):
@@ -384,19 +300,17 @@ class MLLMRuntime:
     def place(self, params):
         """Place a joint {vit, lm} param tree onto the section meshes and
         build matching optimizer states."""
-        pv = jax.device_put(params["vit"], self.vp_shard)
-        pl = jax.device_put(params["lm"], self.lp_shard)
-        opts = {"vit": jax.device_put(adamw.init(pv), self.vo_shard),
-                "lm": jax.device_put(adamw.init(pl), self.lo_shard)}
-        return {"vit": pv, "lm": pl}, opts
+        p, o = self._crt.place({"vit": params["vit"],
+                                "llm": params["lm"]})
+        return ({"vit": p["vit"], "lm": p["llm"]},
+                {"vit": o["vit"], "lm": o["llm"]})
 
     def plan_iteration(self, has_image, *, reorder: bool = True
                        ) -> IterationPlan:
-        has = np.asarray(has_image).astype(bool)
-        samples = cmdl.sample_tuples(self.graph, {"vit": has}, self.S,
-                                     n=len(has))
-        order, sched = order_samples(samples, reorder=reorder)
-        return build_plan(order, has, self.mbs, schedule=sched)
+        p = self._crt.plan_iteration(
+            {"has_image": np.asarray(has_image)}, reorder=reorder)
+        return IterationPlan(p.order, p.mbs, p.n_mb, p.activation,
+                             p.schedule)
 
     # ------------------------------------------------------------------ #
     def train_iteration(self, params, opts, batch, step_idx, *,
@@ -407,142 +321,23 @@ class MLLMRuntime:
         """One global-batch iteration through the executor.  Returns
         (params, opts, metrics) with metrics carrying the realized
         ExecutionResult (timeline, makespan, utilization) and the plan."""
-        host = {k: np.asarray(v) for k, v in batch.items()}
         if plan is None:
-            plan = self.plan_iteration(host["has_image"], reorder=reorder)
-        idx = list(plan.order)
-        ordered = {k: v[idx] for k, v in host.items() if k != "has_image"}
-        n_mb, m = plan.n_mb, plan.mbs
-        image_set = set(plan.image_mbs)
-        pv, pl = params["vit"], params["lm"]
-        q = self.rt.queue
-        it = f"it{int(step_idx)}"
-        vit_ctx: Dict[int, tuple] = {}
-        vit_acc = {"g": None}
-        llm_acc = {"g": None, "loss": jnp.float32(0.0)}
-
-        def vit_fwd_task(i):
-            def fn():
-                rows = slice(i * m, (i + 1) * m)
-                sub = ordered["patches"][rows][plan.vis_idx[i]]
-                sub_d = jax.device_put(jnp.asarray(sub),
-                                       self._patch_shard)
-                vval = jax.device_put(jnp.asarray(plan.vis_valid[i]),
-                                      self._valid_shard_v)
-                emb = self._vit_fwd(pv, sub_d, vval)
-                vit_ctx[i] = (sub_d, vval)
-                q.push("vit", "llm", f"{it}/emb{i}", emb)
-                return emb
-            return fn
-
-        def vit_bwd_task(i):
-            def fn():
-                ct = q.pull("llm", "vit", f"{it}/demb{i}",
-                            sharding=self._emb_shard_v, timeout=timeout)
-                mark_start()      # the stall above is idle, not busy
-                sub_d, vval = vit_ctx.pop(i)
-                g = self._vit_bwd(pv, sub_d, vval, ct)
-                g0 = vit_acc["g"]
-                if g0 is None:
-                    # seed with f32 zeros like the oracle's scan carry —
-                    # seeding with the raw (param-dtype) grad would keep
-                    # a single-image-mb bf16 section accumulating in
-                    # bf16 and double-round the /n_mb normalization
-                    g0 = jax.tree_util.tree_map(
-                        lambda x: jnp.zeros(x.shape, jnp.float32), g)
-                vit_acc["g"] = jax.tree_util.tree_map(
-                    lambda a, b: a + b.astype(jnp.float32), g0, g)
-                # block before finishing: the section mesh must be quiet
-                # when another thread (main: gnorm/update) launches its
-                # next collective program (XLA CPU rendezvous contract)
-                jax.block_until_ready(vit_acc["g"])
-                return True
-            return fn
-
-        def llm_task(i):
-            def fn():
-                if i in image_set:
-                    emb = q.pull("vit", "llm", f"{it}/emb{i}",
-                                 sharding=self._emb_shard_l,
-                                 timeout=timeout)
-                    mark_start()  # waiting on the ViT is a stall the
-                    #               scheduler should have hidden
-                else:
-                    # all-text microbatch: the ViT never runs; its
-                    # contribution is the exact zero the oracle computes
-                    emb = jax.device_put(
-                        jnp.zeros((m, self.K, self.Vd),
-                                  jnp.float32 if self.vit_cfg.dtype ==
-                                  "float32" else jnp.bfloat16),
-                        self._emb_shard_l)
-                rows = slice(i * m, (i + 1) * m)
-                mb = {k: jax.device_put(jnp.asarray(ordered[k][rows]),
-                                        self._mb_shard[k])
-                      for k in LM_KEYS}
-                vidx = jnp.asarray(plan.vis_idx[i])
-                loss, g_pl, g_emb = self._llm_grad(pl, mb, emb, vidx)
-                if i in image_set:
-                    q.push("llm", "vit", f"{it}/demb{i}", g_emb)
-                llm_acc["loss"] = llm_acc["loss"] + loss
-                g0 = llm_acc["g"]
-                if g0 is None:
-                    g0 = jax.tree_util.tree_map(
-                        lambda x: jnp.zeros(x.shape, jnp.float32), pl)
-                llm_acc["g"] = jax.tree_util.tree_map(
-                    lambda a, b: a + b.astype(jnp.float32), g0, g_pl)
-                jax.block_until_ready((llm_acc["g"], llm_acc["loss"]))
-                return loss
-            return fn
-
-        dispatches: List[Dispatch] = []
-        for i in plan.image_mbs:
-            dispatches.append(Dispatch("vit", f"fwd{i}", vit_fwd_task(i)))
-        for i in range(n_mb):
-            dispatches.append(Dispatch("llm", f"mb{i}", llm_task(i)))
-        for i in plan.image_mbs:
-            dispatches.append(Dispatch("vit", f"bwd{i}", vit_bwd_task(i)))
-        execution = self.executor.run(dispatches, timeout=timeout)
-
-        # ---- finalize: accumulate → normalize → joint-norm AdamW ------
-        if vit_acc["g"] is None:        # all-text batch: exact-zero grads
-            vit_acc["g"] = jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape, jnp.float32), pv)
-        g_lm = jax.tree_util.tree_map(
-            lambda g, p: (g / n_mb).astype(p.dtype), llm_acc["g"], pl)
-        g_vit = jax.tree_util.tree_map(
-            lambda g, p: (g / n_mb).astype(p.dtype), vit_acc["g"], pv)
-        loss = llm_acc["loss"] / n_mb
-        gnorm = self._joint_gnorm(g_lm, g_vit)
-        lr = self.lr_fn(jnp.int32(step_idx))
-        new_pl, new_ol, _ = self._update_l(g_lm, opts["lm"], lr, gnorm)
-        new_pv, new_ov, _ = self._update_v(g_vit, opts["vit"], lr, gnorm)
-        # synchronize the (async-dispatched, main-thread) update programs
-        # before returning: the next iteration's worker threads launch
-        # collective-bearing programs on the same section meshes, and XLA
-        # CPU deadlocks when two host threads interleave collective
-        # launches across one device set (rendezvous mismatch)
-        jax.block_until_ready((new_pl, new_ol, new_pv, new_ov))
-        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
-                   "lr": lr, "execution": execution, "plan": plan,
-                   "n_vit_tasks": 2 * len(plan.image_mbs)}
+            plan = self.plan_iteration(np.asarray(batch["has_image"]),
+                                       reorder=reorder)
+        p, o, metrics = self._crt.train_iteration(
+            {"vit": params["vit"], "llm": params["lm"]},
+            {"vit": opts["vit"], "llm": opts["lm"]},
+            batch, step_idx, plan=plan, return_grads=return_grads,
+            timeout=timeout)
+        metrics["n_vit_tasks"] = metrics["n_tasks"].get("vit", 0)
         if return_grads:
-            metrics["grads"] = {"lm": g_lm, "vit": g_vit}
-        return ({"vit": new_pv, "lm": new_pl},
-                {"vit": new_ov, "lm": new_ol}, metrics)
-
-    def _joint_gnorm(self, g_lm, g_vit):
-        """Global grad norm across BOTH sections (the colocated semantics:
-        one clip threshold for the whole compound model), assembled from
-        per-section per-leaf sums of squares in joint-tree leaf order.
-        The leaves live on disjoint committed meshes, so they cannot be
-        stacked device-side — one batched ``device_get`` bridges them."""
-        lm_v, vit_v = jax.device_get(         # single batched sync
-            [self._ssq_l(g_lm), self._ssq_v(g_vit)])
-        return jnp.sqrt(jnp.sum(jnp.asarray(
-            np.concatenate([lm_v, vit_v]))))
+            g = metrics["grads"]
+            metrics["grads"] = {"lm": g["llm"], "vit": g["vit"]}
+        return ({"vit": p["vit"], "lm": p["llm"]},
+                {"vit": o["vit"], "lm": o["llm"]}, metrics)
 
     def shutdown(self):
-        self.rt.shutdown()
+        self._crt.shutdown()
 
     def __enter__(self):
         return self

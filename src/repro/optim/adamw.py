@@ -58,7 +58,15 @@ def update(grads, state: AdamWState, lr: jnp.ndarray,
 
     ``gnorm`` overrides the clip norm with a precomputed value — the
     disaggregated runtimes pass the *joint* norm across all sections so
-    per-section updates clip exactly like one colocated update would."""
+    per-section updates clip exactly like one colocated update would.
+    Passing it with clipping disabled raises: the caller clearly expects
+    the joint norm to drive the update, and it would be silently ignored.
+    """
+    if gnorm is not None and cfg.clip_norm <= 0:
+        raise ValueError(
+            f"adamw.update: gnorm= was passed but clipping is disabled "
+            f"(clip_norm={cfg.clip_norm}) — the precomputed joint norm "
+            "would be silently ignored; enable clip_norm or drop gnorm=")
     if gnorm is None:
         gnorm = global_norm(grads)
     scale = jnp.where(gnorm > cfg.clip_norm, cfg.clip_norm / gnorm, 1.0) \

@@ -104,3 +104,24 @@ def test_state_specs_structure():
     sp = adamw.state_specs(params)
     assert sp.mu["w"].dtype == jnp.float32
     assert sp.master["w"].shape == (4, 4)
+
+
+def test_gnorm_with_clipping_disabled_raises():
+    """adamw.update(gnorm=) with clip_norm=0 used to silently ignore the
+    precomputed joint norm; it must raise instead (the disaggregated
+    runtimes only pass gnorm= when a clip threshold is active)."""
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    state = adamw.init(params)
+    grads = {"w": jnp.full((4,), 0.5, jnp.float32)}
+    cfg = adamw.AdamWConfig(clip_norm=0.0)
+    with pytest.raises(ValueError, match="clipping is disabled"):
+        adamw.update(grads, state, jnp.float32(1e-3), cfg,
+                     gnorm=jnp.float32(1.0))
+    # without gnorm= the unclipped path still works
+    new_p, _, gn = adamw.update(grads, state, jnp.float32(1e-3), cfg)
+    assert np.isfinite(float(gn))
+    # and with clipping enabled the override is honored
+    cfg2 = adamw.AdamWConfig(clip_norm=0.1)
+    _, _, gn2 = adamw.update(grads, state, jnp.float32(1e-3), cfg2,
+                             gnorm=jnp.float32(42.0))
+    assert float(gn2) == 42.0

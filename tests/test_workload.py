@@ -1,0 +1,226 @@
+"""Spec-compile-time guarantees of the declarative workload API.
+
+Runtime equivalence (disaggregated ≡ colocated, bit-for-bit for MLLM)
+lives in the multi-device subprocess drivers; this file covers what must
+raise (or hold) BEFORE any mesh is carved or jit traced: port typing,
+graph shape, activation layouts, and the consolidated per-section
+parallelism validation."""
+import numpy as np
+import pytest
+
+import repro.core.workload as wl
+from repro.configs import get_reduced
+from repro.core.types import ParallelConfig
+from repro.dist import sharding as shd
+
+
+def _cfg():
+    return get_reduced("qwen1.5-0.5b").replace(
+        dtype="float32", num_layers=2, vocab_size=64, d_ff=128)
+
+
+def _producer(name="prod", port=None, **kw):
+    port = port or wl.Port("h", (wl.SEQ, 16), "float32")
+    return wl.SectionSpec(
+        name, _cfg(), ParallelConfig(),
+        fn=lambda p, x: {"h": x["tokens"]}, params={},
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        emits=(port,), mode="fwd_only", **kw)
+
+
+def _loss(consumes=(), name="crit", **kw):
+    return wl.SectionSpec(
+        name, _cfg(), ParallelConfig(),
+        fn=lambda p, x: 0.0, params={},
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        consumes=tuple(consumes), loss=True, critical=True, **kw)
+
+
+def _spec(*sections):
+    return wl.WorkloadSpec("t", tuple(sections), seq_len=8,
+                           global_batch=4, mbs=2)
+
+
+# --------------------------------------------------------------------- #
+# spec-compile validation
+# --------------------------------------------------------------------- #
+def test_valid_spec_passes():
+    port = wl.Port("h", (wl.SEQ, 16), "float32")
+    _spec(_producer(port=port),
+          _loss(consumes=[wl.Consume("prod", port)])).validate()
+
+
+def test_port_shape_mismatch_raises():
+    emit = wl.Port("h", (wl.SEQ, 16), "float32")
+    expect = wl.Port("h", (wl.SEQ, 32), "float32")
+    with pytest.raises(ValueError, match="port type mismatch"):
+        _spec(_producer(port=emit),
+              _loss(consumes=[wl.Consume("prod", expect)])).validate()
+
+
+def test_port_dtype_mismatch_raises():
+    emit = wl.Port("h", (wl.SEQ, 16), "float32")
+    expect = wl.Port("h", (wl.SEQ, 16), "bfloat16")
+    with pytest.raises(ValueError, match="port type mismatch"):
+        _spec(_producer(port=emit),
+              _loss(consumes=[wl.Consume("prod", expect)])).validate()
+
+
+def test_unknown_port_raises():
+    with pytest.raises(ValueError, match="does not emit"):
+        _spec(_producer(),
+              _loss(consumes=[wl.Consume(
+                  "prod", wl.Port("nope", (4,), "float32"))])).validate()
+
+
+def test_unknown_section_raises():
+    with pytest.raises(ValueError, match="unknown section"):
+        _spec(_producer(),
+              _loss(consumes=[wl.Consume(
+                  "ghost", wl.Port("h", (wl.SEQ, 16),
+                                   "float32"))])).validate()
+
+
+def test_exactly_one_critical():
+    with pytest.raises(ValueError, match="critical"):
+        _spec(_producer()).validate()
+
+
+def test_critical_with_activation_raises():
+    with pytest.raises(ValueError, match="activation"):
+        _spec(_producer(),
+              _loss(activation=lambda b: b["flag"])).validate()
+
+
+def test_fwd_only_loss_raises():
+    bad = wl.SectionSpec(
+        "crit", _cfg(), ParallelConfig(), fn=lambda p, x: 0.0, params={},
+        loss=True, critical=True, mode="fwd_only")
+    with pytest.raises(ValueError, match="fwd_bwd loss section"):
+        _spec(_producer(), bad).validate()
+
+
+def test_trainable_port_fanout_raises():
+    """A trainable producer's port needs exactly one consumer so the bwd
+    task knows where its cotangent comes from."""
+    port = wl.Port("h", (wl.SEQ, 16), "float32")
+    prod = wl.SectionSpec(
+        "prod", _cfg(), ParallelConfig(),
+        fn=lambda p, x: {"h": x["tokens"]}, params={},
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        emits=(port,), mode="fwd_bwd")
+    with pytest.raises(ValueError, match="exactly one consumer"):
+        _spec(prod, _loss()).validate()
+
+
+def test_trainable_port_into_fwd_only_consumer_raises():
+    """A fwd_only consumer can never return a cotangent — the producer's
+    bwd task would deadlock waiting on it; must raise at spec-compile."""
+    pa = wl.Port("a", (wl.SEQ, 16), "float32")
+    pb = wl.Port("b", (wl.SEQ, 16), "float32")
+    prod = wl.SectionSpec(
+        "prod", _cfg(), ParallelConfig(),
+        fn=lambda p, x: {"a": x["tokens"]}, params={},
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        emits=(pa,), mode="fwd_bwd")
+    mid = wl.SectionSpec(
+        "mid", _cfg(), ParallelConfig(),
+        fn=lambda p, x: {"b": x["prod.a"]}, params={},
+        emits=(pb,), consumes=(wl.Consume("prod", pa),),
+        mode="fwd_only")
+    with pytest.raises(ValueError, match="never return a cotangent"):
+        _spec(prod, mid,
+              _loss(consumes=[wl.Consume("mid", pb)])).validate()
+
+
+def test_cycle_raises():
+    pa = wl.Port("a", (4,), "float32")
+    pb = wl.Port("b", (4,), "float32")
+    s1 = wl.SectionSpec("s1", _cfg(), ParallelConfig(),
+                        fn=lambda p, x: {"a": 0}, params={},
+                        emits=(pa,), mode="fwd_only",
+                        consumes=(wl.Consume("s2", pb),))
+    s2 = wl.SectionSpec("s2", _cfg(), ParallelConfig(),
+                        fn=lambda p, x: {"b": 0}, params={},
+                        emits=(pb,), mode="fwd_only",
+                        consumes=(wl.Consume("s1", pa),))
+    with pytest.raises(ValueError, match="cycle"):
+        _spec(s1, s2, _loss()).validate()
+
+
+def test_to_graph_edges_and_seq_scale():
+    port = wl.Port("h", (wl.SEQ, 16), "float32")
+    prod = _producer(port=port, seq_len=32)
+    spec = _spec(prod, _loss(consumes=[wl.Consume("prod", port)]))
+    g = spec.to_graph()
+    assert set(g.sections) == {"prod", "crit"}
+    assert g.sections["prod"].seq_scale == 32 / 8
+    (e,) = g.edges
+    assert (e.src, e.dst) == ("prod", "crit")
+    assert e.bytes_per_token == 16 * 4          # f32 hidden width
+
+
+# --------------------------------------------------------------------- #
+# consolidated per-section parallelism validation
+# --------------------------------------------------------------------- #
+def test_section_pp_rejected_with_section_and_axis():
+    mesh = shd.abstract_mesh((1, 2, 1, 1),
+                             ("data", "pipe", "seq", "model"))
+    with pytest.raises(NotImplementedError,
+                       match=r"section 'vit'.*pipe"):
+        wl.validate_section_parallel("vit", _cfg(), ParallelConfig(pp=2),
+                                     mesh)
+
+
+def test_section_mesh_mismatch_names_section():
+    mesh = shd.abstract_mesh((2, 1, 1, 1),
+                             ("data", "pipe", "seq", "model"))
+    with pytest.raises(ValueError, match=r"section 'vit'.*cp=2"):
+        wl.validate_section_parallel("vit", _cfg(), ParallelConfig(cp=2),
+                                     mesh)
+
+
+def test_section_cp_on_attention_free_arch_names_section():
+    ssm = get_reduced("mamba2-130m").replace(dtype="float32")
+    mesh = shd.abstract_mesh((1, 1, 2, 1),
+                             ("data", "pipe", "seq", "model"))
+    with pytest.raises(NotImplementedError, match=r"section 'ssm'"):
+        wl.validate_section_parallel("ssm", ssm, ParallelConfig(cp=2),
+                                     mesh)
+
+
+def test_section_cp_accepted():
+    mesh = shd.abstract_mesh((1, 1, 2, 1),
+                             ("data", "pipe", "seq", "model"))
+    assert wl.validate_section_parallel(
+        "vit", _cfg(), ParallelConfig(cp=2), mesh) == "cp"
+
+
+# --------------------------------------------------------------------- #
+# activation layouts (the host-side half of data-dependent activation)
+# --------------------------------------------------------------------- #
+def test_build_activation_identity_order():
+    flags = np.array([1, 0, 0, 1, 1, 0, 0, 0], bool)
+    act = wl.build_activation(list(range(8)), flags, 4)
+    assert act.active_mbs == (0, 1)
+    np.testing.assert_array_equal(act.idx[0][:2], [0, 3])
+    np.testing.assert_array_equal(act.valid[0], [1, 1, 0, 0])
+    np.testing.assert_array_equal(act.idx[1][:1], [0])
+    np.testing.assert_array_equal(act.valid[1], [1, 0, 0, 0])
+
+
+def test_build_activation_reorder_groups():
+    """A grouping permutation turns 2 activated microbatches into 1."""
+    flags = np.array([1, 0, 0, 0, 1, 0, 0, 0], bool)
+    fifo = wl.build_activation(list(range(8)), flags, 4)
+    assert fifo.active_mbs == (0, 1)
+    grouped = wl.build_activation([0, 4, 1, 2, 3, 5, 6, 7], flags, 4)
+    assert grouped.active_mbs == (0,)
+    np.testing.assert_array_equal(grouped.idx[0][:2], [0, 1])
+    np.testing.assert_array_equal(grouped.valid[0], [1, 1, 0, 0])
+
+
+def test_build_activation_none_active():
+    act = wl.build_activation(list(range(4)), np.zeros(4, bool), 2)
+    assert act.active_mbs == ()
+    assert not act.valid.any()
