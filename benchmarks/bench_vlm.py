@@ -57,6 +57,11 @@ def _realized_rows() -> list:
                  round(rep["realized_speedup"], 4)))
     rows.append(("vlm_realized_wavefront_reordered_iters", 0.0,
                  rep["wavefront"]["reordered_iters"]))
+    ov = rep["overlap"]
+    rows.append(("vlm_overlap_wall_speedup", 0.0,
+                 round(ov["wall_speedup"], 4)))
+    rows.append(("vlm_overlap_vit_util_gain", 0.0,
+                 round(ov["vit_util_gain"], 4)))
     return rows
 
 

@@ -8,12 +8,19 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
 * bench_kernels   — kernel layer (substrate)
 
 ``--smoke`` runs the cheap CI subset (scheduler only, capped sweep).
+``--vlm-realized`` runs the executed (multi-device subprocess) MLLM
+bench and writes its JSON — wavefront-vs-FIFO plus overlap-on-vs-off —
+to ``BENCH_vlm_realized.json`` at the repo root, where it is committed
+so the realized-performance trajectory is tracked in-tree.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import inspect
+import json
+import os
+import subprocess
 import sys
 import traceback
 from pathlib import Path
@@ -25,11 +32,43 @@ sys.path.insert(0, str(_ROOT / "src"))
 sys.path.insert(0, str(_ROOT))
 
 
+def vlm_realized(smoke: bool) -> None:
+    """Run bench_vlm_realized in its own interpreter (it needs 8 virtual
+    devices) and record the JSON at the repo root."""
+    env = dict(os.environ, PYTHONPATH=str(_ROOT / "src"))
+    cmd = [sys.executable, str(_ROOT / "benchmarks" /
+                               "bench_vlm_realized.py")]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=1800)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        sys.exit(proc.returncode)
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    out = _ROOT / "BENCH_vlm_realized.json"
+    out.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+    ov = data["overlap"]
+    print(f"wavefront_vs_fifo_speedup,{data['realized_speedup']:.4f}",
+          flush=True)
+    print(f"overlap_wall_speedup,{ov['wall_speedup']:.4f}", flush=True)
+    print(f"overlap_vit_util_gain,{ov['vit_util_gain']:.4f}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: scheduler benches only")
+    ap.add_argument("--vlm-realized", action="store_true",
+                    help="run the executed MLLM bench (subprocess, 8 "
+                         "virtual devices) and write "
+                         "BENCH_vlm_realized.json at the repo root")
     args = ap.parse_args()
+
+    if args.vlm_realized:
+        vlm_realized(args.smoke)
+        return
 
     names = ["scheduler"]
     if not args.smoke:

@@ -11,6 +11,10 @@ by the compound executor with wavefront-scheduled microbatch dispatch.
   scheduler 6-tuples, Algorithm 1 reorders the samples, and the executor
   dispatches microbatches to the section workers — text-only microbatches
   never touch the ViT section (data-dependent activation);
+* streams iterations with ``lookahead=1`` through the
+  ``install / submit_iteration / retire`` API: optimizer updates run on
+  the section workers, so iteration i+1 queues up behind each section's
+  own update instead of a global barrier;
 * reports the REALIZED (executed, from the executor timeline — not
   simulated) critical-section utilization and the wavefront-vs-FIFO
   makespan of the final iteration.
@@ -55,27 +59,44 @@ def main():
                      lm_parallel=ParallelConfig(dp=4),
                      global_batch=B, seq_len=S, mbs=MBS, impl="ref",
                      lr_schedule=functools.partial(schedules.constant,
-                                                   peak_lr=2e-3))
+                                                   peak_lr=2e-3),
+                     lookahead=1)
     print(f"== disaggregated MLLM runtime: vit mesh (dp=4), llm mesh "
-          f"(dp=4), mbs={MBS} ==")
+          f"(dp=4), mbs={MBS}, lookahead=1 ==")
     params, opts = rt.init(jax.random.PRNGKey(0))
     data = vlm_batches(batch=B, seq_len=S, vocab=1024, vision_ratio=0.5,
                        image_tokens=K, patch_dim=16, seed=0)
 
+    # stream the training loop: submit_iteration enqueues i+1 while the
+    # slowest section still drains i; retire() yields metrics in order
+    rt.install(params, opts)
     losses, utils = [], []
     metrics = None
-    for i in range(25):
-        batch = next(data)
-        params, opts, metrics = rt.train_iteration(params, opts, batch, i)
-        ex = metrics["execution"]
-        losses.append(float(metrics["loss"]))
+    done = 0
+
+    def account(m):
+        nonlocal metrics, done
+        metrics = m
+        ex = m["execution"]
+        losses.append(float(m["loss"]))
         utils.append(ex.utilization("llm"))
-        if i % 8 == 0:
-            n_img = len(metrics["plan"].image_mbs)
-            print(f"iter {i:3d}: loss={losses[-1]:.4f} "
+        if done % 8 == 0:
+            n_img = len(m["plan"].image_mbs)
+            print(f"iter {done:3d}: loss={losses[-1]:.4f} "
                   f"realized-llm-util={utils[-1]:.3f} "
                   f"vit-mbs={n_img}/{rt.n_mb} "
                   f"makespan={ex.makespan*1e3:.0f}ms")
+        done += 1
+
+    batch = None
+    for i in range(25):
+        batch = next(data)
+        rt.submit_iteration(batch, i)
+        while rt.in_flight > 1:
+            account(rt.retire())
+    for m in rt.drain():
+        account(m)
+    params, opts = rt.state()
 
     # wavefront vs FIFO on the last batch, from the executor's timeline
     _, _, m_fifo = rt.train_iteration(params, opts, batch, 99,

@@ -23,10 +23,17 @@ Data-dependent activation is expressed by simply not emitting a dispatch:
 a sample (or microbatch) that does not activate a section produces no task
 for that section's worker — the dynamic path of MLLM training where
 text-only samples bypass the vision section entirely.
+
+Cross-iteration streaming (:class:`StreamSession`): dispatches carry an
+iteration index, workers consume one continuous per-section FIFO stream
+spanning iterations, and results drain asynchronously (event-driven, no
+polling) into per-iteration :class:`ExecutionResult`s — iteration ``i+1``'s
+tasks for a section may start the moment that section's own ``i`` tasks
+finish, without waiting for the other sections' tails.
 """
 from __future__ import annotations
 
-import queue as queue_mod
+import logging
 import threading
 import time
 from dataclasses import dataclass
@@ -39,6 +46,8 @@ from repro.core.scheduler import (ScheduleResult, merge_fanout_schedules,
                                   partition_global_batch,
                                   wavefront_schedule)
 from repro.core.simulator import Sample
+
+_log = logging.getLogger("repro.executor")
 
 
 @dataclass(frozen=True)
@@ -131,6 +140,164 @@ def mark_start():
         slot["start"] = time.perf_counter()
 
 
+class _IterationState:
+    """In-flight bookkeeping of one submitted iteration."""
+
+    __slots__ = ("seq", "t0", "order", "n_expected", "done", "results",
+                 "events", "error", "aborted")
+
+    def __init__(self, seq: int, t0: float, order: Dict[str, List[str]]):
+        self.seq = seq
+        self.t0 = t0
+        self.order = order                  # section -> tags (FIFO order)
+        self.n_expected = sum(len(t) for t in order.values())
+        self.done: set = set()              # completed (section, tag)
+        self.results: Dict[Tuple[str, str], Any] = {}
+        self.events: List[TimelineEvent] = []
+        self.error: Optional[Tuple[str, str, TaskError]] = None
+        self.aborted = False
+
+
+class StreamSession:
+    """Streaming view over an executor's workers: iteration-indexed
+    submits feed one continuous per-section FIFO stream, results drain
+    event-driven into per-iteration :class:`ExecutionResult`s.
+
+    ``submit(i, dispatches)`` enqueues iteration ``i``'s tasks behind
+    whatever is already streaming — per-section worker FIFO serializes a
+    section's own iterations while different sections overlap freely.
+    ``retire(i)`` blocks (on a condition variable, not a poll) until
+    iteration ``i`` completes and returns its realized execution.  Every
+    result is routed to its iteration through a per-task sink, so a
+    leftover from an aborted iteration can never satisfy — or silently
+    poison — another iteration's drain; a straggling :class:`TaskError`
+    that lands after its iteration was already aborted is *logged*
+    rather than dropped."""
+
+    def __init__(self, executor: "CompoundExecutor"):
+        self.ex = executor
+        self._cv = threading.Condition()
+        self._iters: Dict[int, _IterationState] = {}
+        self._pending: List[int] = []       # submitted, not yet retired
+        self._last_seq: Optional[int] = None
+
+    # ------------------------------------------------------------------ #
+    def submit(self, iteration: int,
+               dispatches: Sequence[Dispatch]) -> None:
+        """Enqueue one iteration's dispatch list onto the section
+        streams (per-section FIFO in list order)."""
+        per_section: Dict[str, List[Dispatch]] = {}
+        for d in dispatches:
+            assert d.section in self.ex.workers, d.section
+            per_section.setdefault(d.section, []).append(d)
+        for name, lst in per_section.items():
+            tags = [d.tag for d in lst]
+            assert len(set(tags)) == len(tags), \
+                f"duplicate dispatch tags for section {name}: {tags}"
+        with self._cv:
+            assert self._last_seq is None or iteration > self._last_seq, \
+                (f"iteration indices must be strictly increasing: got "
+                 f"{iteration} after {self._last_seq}")
+            assert iteration not in self._iters, iteration
+            self._last_seq = iteration
+            st = _IterationState(
+                iteration, time.perf_counter(),
+                {n: [d.tag for d in lst]
+                 for n, lst in per_section.items()})
+            self._iters[iteration] = st
+            self._pending.append(iteration)
+        for name, lst in per_section.items():
+            w = self.ex.workers[name]
+            for d in lst:
+                w.submit(f"i{iteration}:{d.tag}", self._timed(st, d),
+                         sink=self._sink(st, d))
+
+    @property
+    def in_flight(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _timed(st: _IterationState, d: Dispatch):
+        def timed():
+            _task_local.slot = {"start": time.perf_counter()}
+            return _block(d.fn())
+        return timed
+
+    def _sink(self, st: _IterationState, d: Dispatch):
+        def deliver(item):
+            _tag, out = item
+            end = time.perf_counter()
+            slot = getattr(_task_local, "slot", None) or {"start": end}
+            _task_local.slot = None
+            with self._cv:
+                st.events.append(TimelineEvent(
+                    d.section, d.tag, slot["start"] - st.t0,
+                    end - st.t0))
+                st.results[(d.section, d.tag)] = out
+                st.done.add((d.section, d.tag))
+                if isinstance(out, TaskError):
+                    if st.aborted:
+                        # satellite fix: a poisoned task completing after
+                        # its iteration already aborted used to vanish
+                        # without a trace
+                        _log.warning(
+                            "stale TaskError after iteration %d aborted: "
+                            "section %s task %r failed:\n%s", st.seq,
+                            d.section, d.tag, out.traceback)
+                    elif st.error is None:
+                        st.error = (d.section, d.tag, out)
+                self._cv.notify_all()
+        return deliver
+
+    # ------------------------------------------------------------------ #
+    def retire(self, iteration: Optional[int] = None, *,
+               timeout: float = 300.0) -> ExecutionResult:
+        """Wait (event-driven) for one iteration to complete and return
+        its realized execution.  Defaults to the oldest in flight.  A
+        failed task raises that task's traceback immediately — without
+        waiting for the rest of the iteration."""
+        with self._cv:
+            if iteration is None:
+                if not self._pending:
+                    raise RuntimeError(
+                        "stream session: no iteration in flight")
+                iteration = self._pending[0]
+            st = self._iters.get(iteration)
+            if st is None:
+                raise KeyError(
+                    f"iteration {iteration} is not in flight")
+            deadline = time.monotonic() + timeout
+            while True:
+                if st.error is not None:
+                    st.aborted = True
+                    self._pending.remove(iteration)
+                    del self._iters[iteration]
+                    name, tag, err = st.error
+                    raise RuntimeError(
+                        f"section {name} task {tag!r} failed:\n"
+                        f"{err.traceback}")
+                if len(st.done) == st.n_expected:
+                    self._pending.remove(iteration)
+                    del self._iters[iteration]
+                    break
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._cv.wait(timeout=remaining):
+                    left: Dict[str, List[str]] = {}
+                    for name, tags in st.order.items():
+                        open_tags = [t for t in tags
+                                     if (name, t) not in st.done]
+                        if open_tags:
+                            left[name] = open_tags
+                    raise TimeoutError(
+                        f"executor: tasks still outstanding after "
+                        f"{timeout}s: {left}")
+        events = sorted(st.events, key=lambda e: (e.start, e.end))
+        return ExecutionResult(dict(st.results), events, st.t0,
+                               dict(st.order))
+
+
 class CompoundExecutor:
     """Generic section-graph executor over workers + message queue.
 
@@ -153,7 +320,11 @@ class CompoundExecutor:
             self.workers = {n: SectionWorker(n) for n in names}
             self.queue = queue if queue is not None else MessageQueue()
             self._owns_workers = True
-        self._run_seq = 0
+
+    def session(self) -> StreamSession:
+        """A new cross-iteration streaming session over this executor's
+        workers (see :class:`StreamSession`)."""
+        return StreamSession(self)
 
     # ------------------------------------------------------------------ #
     def run(self, dispatches: Sequence[Dispatch], *,
@@ -161,83 +332,13 @@ class CompoundExecutor:
         """Execute the dispatch list: per-section FIFO in list order,
         sections concurrent, dependencies resolved by blocking queue
         pulls inside the dispatch fns.  Returns the realized execution.
-        """
-        per_section: Dict[str, List[Dispatch]] = {}
-        for d in dispatches:
-            assert d.section in self.workers, d.section
-            per_section.setdefault(d.section, []).append(d)
-        for name, lst in per_section.items():
-            tags = [d.tag for d in lst]
-            assert len(set(tags)) == len(tags), \
-                f"duplicate dispatch tags for section {name}: {tags}"
-        timeline: List[TimelineEvent] = []
-        tl_lock = threading.Lock()
-        t0 = time.perf_counter()
-        # run-scoped tag namespace: if a previous run's drain raised
-        # mid-batch, its leftover results must not be mistaken for this
-        # run's (drain discards tags outside `expect`)
-        self._run_seq += 1
-        pre = f"r{self._run_seq}:"
 
-        def wrap(d: Dispatch):
-            def timed():
-                slot = {"start": time.perf_counter()}
-                _task_local.slot = slot
-                try:
-                    out = _block(d.fn())
-                finally:
-                    _task_local.slot = None
-                end = time.perf_counter() - t0
-                with tl_lock:
-                    timeline.append(TimelineEvent(
-                        d.section, d.tag, slot["start"] - t0, end))
-                return out
-            return timed
-
-        for name, lst in per_section.items():
-            for d in lst:
-                self.workers[name].submit(pre + d.tag, wrap(d))
-        # drain ALL sections concurrently (round-robin poll): a failure
-        # in any section must surface as that task's traceback, not as a
-        # timeout of some other section blocked on the dead dependency
-        expected = {name: {pre + d.tag for d in lst}
-                    for name, lst in per_section.items()}
-        outstanding = {name: set(tags) for name, tags in expected.items()}
-        results: Dict[Tuple[str, str], Any] = {}
-        end_time = time.monotonic() + timeout
-        while any(outstanding.values()):
-            progressed = False
-            for name, exp in outstanding.items():
-                w = self.workers[name]
-                while True:
-                    try:
-                        tag, val = w.results.get_nowait()
-                    except queue_mod.Empty:
-                        break
-                    if tag not in expected[name]:
-                        continue              # stale result; drop it
-                    if isinstance(val, TaskError):
-                        raise RuntimeError(
-                            f"section {name} task "
-                            f"{val.tag[len(pre):]!r} failed:\n"
-                            f"{val.traceback}")
-                    results[(name, tag[len(pre):])] = val
-                    exp.discard(tag)
-                    progressed = True
-            if not any(outstanding.values()):
-                break
-            if time.monotonic() > end_time:
-                left = {n: sorted(t[len(pre):] for t in e)
-                        for n, e in outstanding.items() if e}
-                raise TimeoutError(
-                    f"executor: tasks still outstanding after "
-                    f"{timeout}s: {left}")
-            if not progressed:
-                time.sleep(0.002)
-        timeline.sort(key=lambda e: (e.start, e.end))
-        return ExecutionResult(
-            results, timeline, t0,
-            {n: [d.tag for d in lst] for n, lst in per_section.items()})
+        One-shot convenience over :class:`StreamSession` (submit a single
+        iteration, retire it) — sink routing guarantees a stale result
+        from an earlier aborted run can never satisfy this run's drain."""
+        s = StreamSession(self)
+        s.submit(0, dispatches)
+        return s.retire(0, timeout=timeout)
 
     def shutdown(self):
         if self._owns_workers:

@@ -17,6 +17,14 @@ The RDMA design maps onto JAX as:
 ``pull`` dequeues the earliest message, automatically gathering fragments
 pushed by multiple senders (the M-to-N pattern) and resharding onto the
 receiver's mesh/spec.
+
+Iteration scopes: a key of the form ``"<scope>/<rest>"`` belongs to tag
+namespace ``<scope>`` (the streaming runtime scopes every iteration's
+traffic under a monotonic ``s<i>/`` prefix).  ``evict_scope`` retires a
+namespace when its iteration retires: leftover messages are dropped
+(and reported) and later push/pull against the retired scope raise —
+cross-iteration prefetch can neither alias a stale tensor nor leak
+buffers.  Keys without a ``/`` are unscoped and never evicted.
 """
 from __future__ import annotations
 
@@ -65,6 +73,7 @@ class MessageQueue:
         self._channels: Dict[Tuple[str, str], _Channel] = {}
         self._lock = threading.Lock()
         self._seq = 0
+        self._retired_scopes: set = set()
         self.bytes_pushed = 0
         self.pushes = 0
 
@@ -73,6 +82,21 @@ class MessageQueue:
             if (src, dst) not in self._channels:
                 self._channels[(src, dst)] = _Channel()
             return self._channels[(src, dst)]
+
+    @staticmethod
+    def _scope(key: str) -> Optional[str]:
+        return key.split("/", 1)[0] if "/" in key else None
+
+    def _check_scope(self, op: str, src: str, dst: str, key: str) -> None:
+        sc = self._scope(key)
+        if sc is not None:
+            with self._lock:
+                retired = sc in self._retired_scopes
+            if retired:
+                raise RuntimeError(
+                    f"{op}({src}->{dst}, {key}): iteration scope {sc!r} "
+                    "is already retired — cross-iteration traffic may "
+                    "not alias a retired namespace")
 
     # ------------------------------------------------------------------ #
     def push(self, src: str, dst: str, key: str, value: jax.Array, *,
@@ -83,6 +107,7 @@ class MessageQueue:
 
         For M-to-N, each of the ``frag_count`` senders pushes its fragment
         with its ``frag_index`` into the global tensor."""
+        self._check_scope("push", src, dst, key)
         ch = self._channel(src, dst)
         gshape = tuple(global_shape or value.shape)
         fidx = frag_index or tuple(slice(0, d) for d in gshape)
@@ -108,6 +133,7 @@ class MessageQueue:
         (the common TP/DP handoff layout) are assembled *device-side* with
         ``jnp.concatenate`` — no host ``np.zeros`` round-trip; arbitrary
         fragment layouts keep the host-assembly fallback."""
+        self._check_scope("pull", src, dst, key)
         ch = self._channel(src, dst)
         # absolute deadline: wakeups for OTHER keys on the channel must
         # not restart the clock (steady unrelated traffic would defer
@@ -128,18 +154,60 @@ class MessageQueue:
                     deadline - time.monotonic())
                 if remaining is not None and remaining <= 0 or \
                         not ch.cv.wait(timeout=remaining):
+                    # the pending-key set makes cross-iteration stalls
+                    # diagnosable: the key that IS buffered (a stale scope,
+                    # a typo'd microbatch index) is usually the answer
+                    pending = sorted(ch.metas)
                     raise TimeoutError(
                         f"pull({src}->{dst}, {key}): "
-                        f"{len(metas)}/{need} fragments after {timeout}s")
+                        f"{len(metas)}/{need} fragments after {timeout}s; "
+                        f"pending keys on this edge: {pending}")
         out = _assemble(frags, metas)
         if sharding is not None:
             out = jax.device_put(out, sharding)
         return out
 
     # ------------------------------------------------------------------ #
+    def evict_scope(self, scope: str) -> Dict[str, List[str]]:
+        """Retire an iteration's tag namespace: drop every leftover
+        message whose key lives under ``scope + "/"`` and refuse future
+        push/pull against it.  Returns ``{"src->dst": [evicted keys]}``
+        (normally empty — leftovers mean a producer pushed something no
+        consumer ever pulled)."""
+        with self._lock:
+            self._retired_scopes.add(scope)
+            channels = list(self._channels.items())
+        evicted: Dict[str, List[str]] = {}
+        for (src, dst), ch in channels:
+            with ch.cv:
+                keys = [k for k in ch.metas if self._scope(k) == scope]
+                for k in keys:
+                    for r in list(ch.metas[k]):
+                        ch.data.pop((k, r), None)
+                    del ch.metas[k]
+                if keys:
+                    evicted[f"{src}->{dst}"] = sorted(keys)
+                    ch.cv.notify_all()
+        return evicted
+
+    # ------------------------------------------------------------------ #
     def stats(self) -> dict:
+        """Totals plus a per-edge view: buffered-key depth, the pending
+        key set, and the approximate buffered bytes on each
+        ``src->dst`` channel."""
+        with self._lock:
+            channels = list(self._channels.items())
+        edges = {}
+        for (src, dst), ch in channels:
+            with ch.cv:
+                pending = sorted(ch.metas)
+                nbytes = sum(int(v.size) * v.dtype.itemsize
+                             for v in ch.data.values())
+            edges[f"{src}->{dst}"] = {"depth": len(pending),
+                                      "pending": pending,
+                                      "bytes": int(nbytes)}
         return {"pushes": self.pushes, "bytes_pushed": self.bytes_pushed,
-                "channels": len(self._channels)}
+                "channels": len(self._channels), "edges": edges}
 
 
 def _axis0_contiguous(metas: Dict[int, "Meta"]) -> Optional[List[int]]:

@@ -84,6 +84,12 @@ class Task:
     tag: str
     fn: Callable
     args: tuple
+    #: optional result route: when set, ``sink((tag, out_or_TaskError))``
+    #: is called on the worker thread instead of ``results.put`` — the
+    #: streaming executor uses this to route every result to the
+    #: iteration that submitted it, so results can never satisfy (or
+    #: poison) another iteration's drain
+    sink: Optional[Callable] = None
 
 
 @dataclass(frozen=True)
@@ -115,16 +121,18 @@ class SectionWorker:
             task = self.inbox.get()
             if task is None:
                 return
+            deliver = task.sink or self.results.put
             try:
                 out = task.fn(*task.args)
-                self.results.put((task.tag, out))
+                deliver((task.tag, out))
             except Exception:
                 tb = traceback.format_exc()
                 self.error = tb
-                self.results.put((task.tag, TaskError(task.tag, tb)))
+                deliver((task.tag, TaskError(task.tag, tb)))
 
-    def submit(self, tag: str, fn: Callable, *args) -> None:
-        self.inbox.put(Task(tag, fn, args))
+    def submit(self, tag: str, fn: Callable, *args,
+               sink: Optional[Callable] = None) -> None:
+        self.inbox.put(Task(tag, fn, args, sink))
 
     def drain(self, n: int, timeout: float = 120.0,
               expect=None) -> Dict[str, Any]:

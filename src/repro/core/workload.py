@@ -34,18 +34,35 @@ bit-for-bit equivalent to its colocated oracle with):
   order, are normalized by ``n_mb`` once, and per-section *jitted* AdamW
   updates share one joint grad-norm across all trainable sections (the
   colocated clipping semantics — ``adamw.update(gnorm=)``);
+* each trainable section's grad-finalize + AdamW update runs as an
+  ``upd`` Dispatch on *that section's own worker* (not the main thread):
+  the joint grad-norm is a small cross-worker rendezvous of per-leaf
+  sum-of-squares vectors through the MessageQueue, and per-section
+  worker FIFO serializes ``upd(i)`` before that section's ``fwd(i+1)``
+  with no global barrier between iterations;
+* iterations stream: ``install()`` adopts params/opts as runtime state,
+  ``submit_iteration()`` enqueues one global batch onto the section
+  streams (traffic scoped under a monotonic ``s<i>/`` namespace, evicted
+  at retirement), ``retire()`` drains the oldest; the ``lookahead`` knob
+  bounds how many iterations may be in flight (0 ⇒ fully serialized,
+  today's semantics); ``train_iteration()`` is the serialized
+  compatibility wrapper;
 * a section with an activation predicate simply emits no Dispatch for a
   microbatch none of whose samples activate it, and its consumers
   substitute the port's exact-zero fill;
 * every jit is traced + compiled from the main thread (the act-hook /
   attention-impl globals are not thread-safe at trace time), and every
   task blocks its section-mesh arrays before returning (XLA CPU deadlocks
-  when two host threads interleave collective launches on one device set).
+  when two host threads interleave collective launches on one device set
+  — moving the updates onto the section workers means every
+  collective-bearing program a mesh runs is launched by its one worker).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import functools
+import logging
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -67,6 +84,8 @@ from repro.optim import adamw, schedules
 #: symbolic sequence-length dim in Field / Port shapes, resolved to the
 #: workload's seq_len at build time (static dims stay ints)
 SEQ = "S"
+
+_log = logging.getLogger("repro.workload")
 
 
 def _np_dtype(dt):
@@ -423,6 +442,24 @@ class IterationPlan:
 # --------------------------------------------------------------------------- #
 # The one generic compound runtime
 # --------------------------------------------------------------------------- #
+class _Inflight:
+    """Host-side record of one submitted-not-yet-retired iteration."""
+
+    __slots__ = ("seq", "scope", "step_idx", "plan", "return_grads",
+                 "ctx", "acc", "crit_acc")
+
+    def __init__(self, seq: int, scope: str, step_idx, plan: IterationPlan,
+                 return_grads: bool, trainable: Sequence[str]):
+        self.seq = seq
+        self.scope = scope
+        self.step_idx = step_idx
+        self.plan = plan
+        self.return_grads = return_grads
+        self.ctx: Dict[Tuple[str, int], Any] = {}
+        self.acc = {n: {"g": None} for n in trainable}
+        self.crit_acc = {"loss": jnp.float32(0.0), "aux": None}
+
+
 class CompoundRuntime:
     """Compile a :class:`WorkloadSpec` into disaggregated execution on the
     compound executor.  See the module docstring for the execution model;
@@ -431,7 +468,8 @@ class CompoundRuntime:
 
     def __init__(self, spec: WorkloadSpec, *, devices=None,
                  impl: str = "ref", lr_schedule=None,
-                 opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+                 opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                 lookahead: int = 0):
         spec.validate()
         self.spec = spec
         self.impl = impl
@@ -442,6 +480,19 @@ class CompoundRuntime:
         self.rt = MaestroRuntime(self.graph, devices)
         self.executor = self.rt.executor()
         self.last_execution = None
+        #: cross-iteration pipelining depth: how many iterations beyond
+        #: the oldest may be in flight at once.  0 ⇒ submit_iteration
+        #: retires the previous iteration before dispatching the next
+        #: (exactly the old barrier semantics); 1 ⇒ iteration i+1's fwd
+        #: tasks stream in behind each section's own upd(i).
+        self.lookahead = int(lookahead)
+        self._session = self.executor.session()
+        self._it_seq = 0
+        self._inflight: "collections.deque[_Inflight]" = collections.deque()
+        self._retired: "collections.deque[dict]" = collections.deque()
+        self._params: Dict[str, Any] = {}
+        self._opts: Dict[str, Any] = {}
+        self._installed = False
         self._topo = spec.topo_order()
         self._crit = spec.critical.name
         self._trainable = [s.name for s in spec.sections if s.trainable]
@@ -555,6 +606,10 @@ class CompoundRuntime:
     def _build(self, global_batch: int, seq_len: Optional[int],
                mbs: int) -> None:
         assert global_batch % mbs == 0, (global_batch, mbs)
+        if getattr(self, "_inflight", None):
+            raise RuntimeError(
+                "cannot rebind workload shapes with iterations in "
+                "flight — drain() first")
         self.B, self.S, self.mbs = global_batch, seq_len, mbs
         self.n_mb = global_batch // mbs
         spec = self.spec
@@ -786,6 +841,23 @@ class CompoundRuntime:
                 else:
                     outs.append(self._bwd[name](params[name], inputs,
                                                 cts))
+        # the optimizer path runs on worker threads too (the per-section
+        # ``upd`` dispatch): trace + compile the ssq and AdamW-update jits
+        # here with dummy (donated) state so no worker ever traces
+        for name in self._trainable:
+            gs = jax.device_put(
+                jax.tree_util.tree_map(
+                    lambda x: jnp.zeros(x.shape, x.dtype), params[name]),
+                self._p_shard[name])
+            st = jax.device_put(adamw.init(params[name]),
+                                self._o_shard[name])
+            outs.append(self._ssq[name](gs))
+            lr = self.lr_fn(jnp.int32(0))
+            if self.opt_cfg.clip_norm > 0:
+                outs.append(self._update[name](gs, st, lr,
+                                               jnp.float32(1.0)))
+            else:
+                outs.append(self._update[name](gs, st, lr))
         jax.block_until_ready(outs)
 
     # ------------------------------------------------------------------ #
@@ -836,18 +908,60 @@ class CompoundRuntime:
         return disp
 
     # ------------------------------------------------------------------ #
-    # one training iteration on the executor
+    # streaming state: install / state
     # ------------------------------------------------------------------ #
-    def train_iteration(self, params, opts, batch, step_idx, *,
-                        reorder: bool = True,
-                        plan: Optional[IterationPlan] = None,
-                        consts: Optional[Dict[str, Dict[str, Any]]] = None,
-                        return_grads: bool = False,
-                        timeout: float = 300.0):
-        """One global-batch iteration.  Returns ``(params, opts,
-        metrics)`` with metrics carrying loss / joint grad_norm / lr /
-        accumulated aux scalars / realized ``execution`` timeline /
-        ``plan`` / per-section ``n_tasks``."""
+    def install(self, params: Dict[str, Any],
+                opts: Dict[str, Any]) -> None:
+        """Adopt per-section params (every section) and optimizer states
+        (at least every trainable section) as the runtime's streaming
+        state.  Worker-side ``upd`` tasks advance this state in place;
+        read it back with :meth:`state`.  Requires a quiescent runtime
+        (nothing in flight)."""
+        if self._inflight:
+            raise RuntimeError(
+                "install() requires a quiescent runtime — retire()/"
+                "drain() the in-flight iterations first")
+        missing = {s.name for s in self.spec.sections} - set(params)
+        if missing:
+            raise ValueError(f"install: missing params for sections "
+                             f"{sorted(missing)}")
+        missing_o = set(self._trainable) - set(opts)
+        if missing_o:
+            raise ValueError(f"install: missing optimizer state for "
+                             f"trainable sections {sorted(missing_o)}")
+        self._params = dict(params)
+        self._opts = dict(opts)
+        self._installed = True
+
+    def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Snapshot of the current (params, opts) streaming state.  Only
+        consistent across sections when nothing is in flight."""
+        return dict(self._params), dict(self._opts)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
+    # ------------------------------------------------------------------ #
+    # one training iteration on the executor (streaming)
+    # ------------------------------------------------------------------ #
+    def submit_iteration(self, batch, step_idx, *,
+                         reorder: bool = True,
+                         plan: Optional[IterationPlan] = None,
+                         consts: Optional[Dict[str, Dict[str, Any]]] = None,
+                         return_grads: bool = False,
+                         timeout: float = 300.0) -> int:
+        """Enqueue one global-batch iteration onto the section streams
+        and return its sequence number.  All tasks — including each
+        trainable section's grad-finalize + AdamW ``upd`` — run on the
+        section workers; nothing blocks here beyond the ``lookahead``
+        gate (when more than ``lookahead`` iterations are already in
+        flight, the oldest is retired first and its metrics buffered for
+        the next :meth:`retire`)."""
+        assert self._installed, \
+            "call install(params, opts) before submit_iteration()"
+        while len(self._inflight) > self.lookahead:
+            self._retired.append(self._retire_oldest(timeout=timeout))
         host = {k: np.asarray(v) for k, v in batch.items()}
         self._ensure_built(host)
         if plan is None:
@@ -873,10 +987,12 @@ class CompoundRuntime:
         by_name = {s.name: s for s in self.spec.sections}
         m = plan.mbs
         q = self.rt.queue
-        it = f"it{int(step_idx)}"
-        ctx_store: Dict[Tuple[str, int], Any] = {}
-        acc = {n: {"g": None} for n in self._trainable}
-        crit_acc = {"loss": jnp.float32(0.0), "aux": None}
+        rec = _Inflight(self._it_seq, f"s{self._it_seq}", step_idx, plan,
+                        return_grads, self._trainable)
+        self._it_seq += 1
+        it = rec.scope     # iteration-scoped tag namespace (evicted on
+        #                    retirement: cross-iteration prefetch cannot
+        #                    alias message keys across iterations)
 
         def mb_inputs(s: SectionSpec, i: int) -> Dict[str, Any]:
             rows = slice(i * m, (i + 1) * m)
@@ -926,9 +1042,9 @@ class CompoundRuntime:
             def fn():
                 pulled = pull_consumed(s, i)
                 inputs = {**mb_inputs(s, i), **pulled}
-                out = self._fwd[s.name](params[s.name], inputs)
+                out = self._fwd[s.name](self._params[s.name], inputs)
                 if s.trainable:
-                    ctx_store[(s.name, i)] = inputs
+                    rec.ctx[(s.name, i)] = inputs
                 for p in s.emits:
                     for cname in self.spec.consumers_of(s.name, p.name):
                         if i in disp.get(cname, ()):
@@ -949,34 +1065,35 @@ class CompoundRuntime:
                            if k not in ct_keys}}
                 if self._grad_has_ct:
                     cts = {k: pulled[k] for k in ct_keys}
-                    val, g_p, g_c = self._grad(params[s.name], cts, rest)
+                    val, g_p, g_c = self._grad(self._params[s.name], cts,
+                                               rest)
                 else:
                     g_c = {}
-                    val, g_p = self._grad(params[s.name], rest)
+                    val, g_p = self._grad(self._params[s.name], rest)
                 loss, aux = (val if s.loss_aux else (val, None))
                 for c in s.consumes:
                     if c.key in g_c and i in disp.get(c.section, ()):
                         q.push(s.name, c.section,
                                f"{it}/ct.{c.key}.{i}", g_c[c.key])
-                crit_acc["loss"] = crit_acc["loss"] + loss
+                rec.crit_acc["loss"] = rec.crit_acc["loss"] + loss
                 if aux is not None:
-                    a0 = crit_acc["aux"]
-                    crit_acc["aux"] = aux if a0 is None else \
+                    a0 = rec.crit_acc["aux"]
+                    rec.crit_acc["aux"] = aux if a0 is None else \
                         jax.tree_util.tree_map(lambda x, y: x + y, a0, aux)
-                g0 = acc[s.name]["g"]
+                g0 = rec.acc[s.name]["g"]
                 if g0 is None:
                     # f32 zero seed, like a colocated scan carry — seeding
                     # with the raw param-dtype grad would double-round
                     g0 = jax.tree_util.tree_map(
                         lambda x: jnp.zeros(x.shape, jnp.float32),
-                        params[s.name])
-                acc[s.name]["g"] = jax.tree_util.tree_map(
+                        self._params[s.name])
+                rec.acc[s.name]["g"] = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), g0, g_p)
                 # block before finishing: the section mesh must be quiet
                 # when another thread launches its next collective-bearing
                 # program (XLA CPU rendezvous contract)
-                jax.block_until_ready((acc[s.name]["g"],
-                                       crit_acc["loss"]))
+                jax.block_until_ready((rec.acc[s.name]["g"],
+                                       rec.crit_acc["loss"]))
                 return loss
             return fn
 
@@ -992,27 +1109,87 @@ class CompoundRuntime:
                         sharding=self._ct_pull_shard[s.name][p.name],
                         timeout=timeout)
                 mark_start()
-                inputs = ctx_store.pop((s.name, i))
+                inputs = rec.ctx.pop((s.name, i))
                 if ct_keys:
                     rest = {k: v for k, v in inputs.items()
                             if k not in ct_keys}
                     g_p, g_c = self._bwd[s.name](
-                        params[s.name],
+                        self._params[s.name],
                         {k: inputs[k] for k in ct_keys}, rest, cts)
                     for c in s.consumes:
                         if c.key in g_c and i in disp.get(c.section, ()):
                             q.push(s.name, c.section,
                                    f"{it}/ct.{c.key}.{i}", g_c[c.key])
                 else:
-                    g_p = self._bwd[s.name](params[s.name], inputs, cts)
-                g0 = acc[s.name]["g"]
+                    g_p = self._bwd[s.name](self._params[s.name], inputs,
+                                            cts)
+                g0 = rec.acc[s.name]["g"]
                 if g0 is None:
                     g0 = jax.tree_util.tree_map(
                         lambda x: jnp.zeros(x.shape, jnp.float32), g_p)
-                acc[s.name]["g"] = jax.tree_util.tree_map(
+                rec.acc[s.name]["g"] = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), g0, g_p)
-                jax.block_until_ready(acc[s.name]["g"])
+                jax.block_until_ready(rec.acc[s.name]["g"])
                 return True
+            return fn
+
+        n_mb = plan.n_mb
+        trainable = list(self._trainable)
+
+        def upd_task(name: str):
+            peers = [n for n in trainable if n != name]
+
+            def fn():
+                g = rec.acc[name]["g"]
+                if g is None:      # section never dispatched: exact zero
+                    g = jax.tree_util.tree_map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32),
+                        self._params[name])
+                gs = jax.tree_util.tree_map(
+                    lambda g_, p: (g_ / n_mb).astype(p.dtype), g,
+                    self._params[name])
+                # joint grad-norm rendezvous: every trainable section
+                # pushes its per-leaf sum-of-squares vector to every peer
+                # BEFORE pulling any (pushes never block → no wait cycle),
+                # then all of them assemble the identical host reduction in
+                # sorted-section order — bitwise the one global clip
+                # threshold the colocated / main-thread finalize computed
+                vec = self._ssq[name](gs)
+                for p in peers:
+                    q.push(name, p, f"{it}/gnorm.{name}", vec)
+                vecs = {name: np.asarray(jax.device_get(vec))}
+                for p in peers:
+                    vecs[p] = np.asarray(jax.device_get(
+                        q.pull(p, name, f"{it}/gnorm.{p}",
+                               timeout=timeout)))
+                if peers:
+                    mark_start()   # rendezvous wait is idle, not busy
+                gnorm = jnp.sqrt(jnp.sum(jnp.asarray(
+                    np.concatenate([vecs[n] for n in sorted(vecs)]))))
+                lr = self.lr_fn(jnp.int32(rec.step_idx))
+                if self.opt_cfg.clip_norm > 0:
+                    p2, o2, _ = self._update[name](gs, self._opts[name],
+                                                   lr, gnorm)
+                else:
+                    p2, o2, _ = self._update[name](gs, self._opts[name],
+                                                   lr)
+                # synchronize the update program before installing: this
+                # worker's next task (fwd of iteration i+1) launches the
+                # next collective-bearing program on the same section mesh
+                # (XLA CPU rendezvous contract)
+                jax.block_until_ready((p2, o2))
+                self._params[name], self._opts[name] = p2, o2
+                out = {"grad_norm": gnorm, "lr": lr}
+                if rec.return_grads:
+                    out["grads"] = gs
+                if name == self._crit:
+                    out["loss"] = (rec.crit_acc["loss"]
+                                   / n_mb).astype(jnp.float32)
+                    if rec.crit_acc["aux"] is not None:
+                        out["aux"] = jax.tree_util.tree_map(
+                            lambda v: (v / n_mb).astype(jnp.float32),
+                            rec.crit_acc["aux"])
+                return out
             return fn
 
         dispatches: List[Dispatch] = []
@@ -1033,59 +1210,91 @@ class CompoundRuntime:
             for i in sorted(disp[name]):
                 dispatches.append(Dispatch(name, f"bwd{i}",
                                            bwd_task(s, i)))
-        execution = self.executor.run(dispatches, timeout=timeout)
+        # grad-finalize + AdamW run on each trainable section's OWN worker:
+        # the per-section FIFO serializes update(i) before that section's
+        # fwd(i+1) while other sections stream ahead independently
+        for name in self._topo:
+            if by_name[name].trainable:
+                dispatches.append(Dispatch(name, "upd", upd_task(name)))
+        self._session.submit(rec.seq, dispatches)
+        self._inflight.append(rec)
+        return rec.seq
+
+    # ------------------------------------------------------------------ #
+    # retirement: collect one iteration's metrics
+    # ------------------------------------------------------------------ #
+    def _retire_oldest(self, *, timeout: float = 300.0) -> dict:
+        rec = self._inflight.popleft()
+        try:
+            execution = self._session.retire(rec.seq, timeout=timeout)
+        finally:
+            leftovers = self.rt.queue.evict_scope(rec.scope)
+            if leftovers:
+                _log.warning(
+                    "iteration %s retired with undrained messages "
+                    "(producer pushed, no consumer pulled): %s",
+                    rec.step_idx, leftovers)
         self.last_execution = execution
+        upd = {n: execution.results[(n, "upd")] for n in self._trainable}
+        crit = upd[self._crit]
+        metrics = {"loss": crit["loss"], "grad_norm": crit["grad_norm"],
+                   "lr": crit["lr"], "execution": execution,
+                   "plan": rec.plan, "n_tasks": execution.task_counts}
+        for k, v in crit.get("aux", {}).items():
+            metrics[k] = v
+        if rec.return_grads:
+            metrics["grads"] = {n: upd[n]["grads"]
+                                for n in self._trainable}
+        return metrics
 
-        # ---- finalize: normalize → joint grad-norm → jitted AdamW ----- #
-        n_mb = plan.n_mb
-        gs = {}
-        for name in self._trainable:
-            g = acc[name]["g"]
-            if g is None:          # section never dispatched: exact zero
-                g = jax.tree_util.tree_map(
-                    lambda x: jnp.zeros(x.shape, jnp.float32),
-                    params[name])
-            gs[name] = jax.tree_util.tree_map(
-                lambda g_, p: (g_ / n_mb).astype(p.dtype), g,
-                params[name])
-        loss = crit_acc["loss"] / n_mb
-        gnorm = self._joint_gnorm(gs)
-        lr = self.lr_fn(jnp.int32(step_idx))
-        new_params = dict(params)
-        new_opts = dict(opts)
-        for name in self._trainable:
-            if self.opt_cfg.clip_norm > 0:
-                p2, o2, _ = self._update[name](gs[name], opts[name], lr,
-                                               gnorm)
-            else:
-                p2, o2, _ = self._update[name](gs[name], opts[name], lr)
-            new_params[name], new_opts[name] = p2, o2
-        # synchronize the main-thread update programs before returning:
-        # the next iteration's worker threads launch collective-bearing
-        # programs on the same section meshes (XLA CPU rendezvous)
-        jax.block_until_ready([(new_params[n], new_opts[n])
-                               for n in self._trainable])
-        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
-                   "lr": lr, "execution": execution, "plan": plan,
-                   "n_tasks": execution.task_counts}
-        if crit_acc["aux"] is not None:
-            for k, v in crit_acc["aux"].items():
-                metrics[k] = (v / n_mb).astype(jnp.float32)
-        if return_grads:
-            metrics["grads"] = gs
+    def retire(self, *, timeout: float = 300.0) -> dict:
+        """Block until the oldest outstanding iteration completes and
+        return its metrics dict (loss / joint grad_norm / lr / aux
+        scalars / realized ``execution`` timeline / ``plan`` /
+        per-section ``n_tasks``).  Iterations auto-retired by the
+        lookahead gate are returned first, in order."""
+        if self._retired:
+            return self._retired.popleft()
+        if not self._inflight:
+            raise RuntimeError("retire(): no iteration in flight")
+        return self._retire_oldest(timeout=timeout)
+
+    def drain(self, *, timeout: float = 300.0) -> List[dict]:
+        """Retire every outstanding iteration (oldest first); returns
+        their metrics in submission order.  Leaves the runtime quiescent
+        — required before ``install()`` or shape rebinding."""
+        out = []
+        while self._retired:
+            out.append(self._retired.popleft())
+        while self._inflight:
+            out.append(self._retire_oldest(timeout=timeout))
+        return out
+
+    # ------------------------------------------------------------------ #
+    # serialized compatibility wrapper
+    # ------------------------------------------------------------------ #
+    def train_iteration(self, params, opts, batch, step_idx, *,
+                        reorder: bool = True,
+                        plan: Optional[IterationPlan] = None,
+                        consts: Optional[Dict[str, Dict[str, Any]]] = None,
+                        return_grads: bool = False,
+                        timeout: float = 300.0):
+        """One serialized global-batch iteration: ``install`` the given
+        state, ``submit_iteration``, ``retire``, and return ``(params,
+        opts, metrics)``.  Exactly the streaming path at lookahead
+        depth 0 — there is no second execution mode."""
+        if self._inflight or self._retired:
+            raise RuntimeError(
+                "train_iteration() is the serialized wrapper; it cannot "
+                "interleave with in-flight submit_iteration()/retire() "
+                "streams — drain() first")
+        self.install(params, opts)
+        self.submit_iteration(batch, step_idx, reorder=reorder, plan=plan,
+                              consts=consts, return_grads=return_grads,
+                              timeout=timeout)
+        metrics = self.retire(timeout=timeout)
+        new_params, new_opts = self.state()
         return new_params, new_opts, metrics
-
-    def _joint_gnorm(self, gs: Dict[str, Any]):
-        """Global grad norm across ALL trainable sections (the colocated
-        semantics: one clip threshold for the whole compound model),
-        assembled from per-section per-leaf sums of squares in joint-tree
-        leaf order (sorted section names, matching a ``{name: tree}``
-        params dict).  The leaves live on disjoint committed meshes, so
-        they cannot be stacked device-side — one batched ``device_get``
-        bridges them."""
-        names = sorted(gs)
-        vecs = jax.device_get([self._ssq[n](gs[n]) for n in names])
-        return jnp.sqrt(jnp.sum(jnp.asarray(np.concatenate(vecs))))
 
     # ------------------------------------------------------------------ #
     def shutdown(self):

@@ -268,7 +268,8 @@ class MLLMRuntime:
                  vit_parallel: ParallelConfig, lm_parallel: ParallelConfig,
                  global_batch: int, seq_len: int, mbs: int,
                  devices=None, impl: str = "ref", lr_schedule=None,
-                 opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+                 opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                 lookahead: int = 0):
         assert global_batch % mbs == 0, (global_batch, mbs)
         self.vit_cfg, self.lm_cfg = vit_cfg, lm_cfg
         self.impl = impl
@@ -287,7 +288,7 @@ class MLLMRuntime:
             spec, devices=devices, impl=impl,
             lr_schedule=lr_schedule or functools.partial(
                 schedules.constant, peak_lr=1e-3),
-            opt_cfg=opt_cfg)
+            opt_cfg=opt_cfg, lookahead=lookahead)
         self.rt = self._crt.rt
         self.executor = self._crt.executor
         self.graph = self._crt.graph
@@ -313,14 +314,26 @@ class MLLMRuntime:
                              p.schedule)
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _remap_metrics(metrics, return_grads):
+        # n_vit_tasks keeps its historical meaning — data-dependent
+        # compute tasks only — so the worker-side ``upd`` (which every
+        # trainable section always runs) is excluded
+        metrics["n_vit_tasks"] = metrics["n_tasks"].get("vit", 0) - 1
+        if return_grads:
+            g = metrics["grads"]
+            metrics["grads"] = {"lm": g["llm"], "vit": g["vit"]}
+        return metrics
+
     def train_iteration(self, params, opts, batch, step_idx, *,
                         reorder: bool = True,
                         plan: Optional[IterationPlan] = None,
                         return_grads: bool = False,
                         timeout: float = 300.0):
-        """One global-batch iteration through the executor.  Returns
-        (params, opts, metrics) with metrics carrying the realized
-        ExecutionResult (timeline, makespan, utilization) and the plan."""
+        """One serialized global-batch iteration through the executor.
+        Returns (params, opts, metrics) with metrics carrying the
+        realized ExecutionResult (timeline, makespan, utilization) and
+        the plan."""
         if plan is None:
             plan = self.plan_iteration(np.asarray(batch["has_image"]),
                                        reorder=reorder)
@@ -329,12 +342,55 @@ class MLLMRuntime:
             {"vit": opts["vit"], "llm": opts["lm"]},
             batch, step_idx, plan=plan, return_grads=return_grads,
             timeout=timeout)
-        metrics["n_vit_tasks"] = metrics["n_tasks"].get("vit", 0)
-        if return_grads:
-            g = metrics["grads"]
-            metrics["grads"] = {"lm": g["llm"], "vit": g["vit"]}
+        self._remap_metrics(metrics, return_grads)
         return ({"vit": p["vit"], "lm": p["llm"]},
                 {"vit": o["vit"], "lm": o["llm"]}, metrics)
+
+    # ------------------------------------------------------------------ #
+    # streaming surface (cross-iteration lookahead)
+    # ------------------------------------------------------------------ #
+    def install(self, params, opts):
+        """Adopt (params, opts) — keyed ``{"vit", "lm"}`` — as the
+        streaming state advanced by worker-side updates."""
+        self._crt.install({"vit": params["vit"], "llm": params["lm"]},
+                          {"vit": opts["vit"], "llm": opts["lm"]})
+
+    def state(self):
+        p, o = self._crt.state()
+        return ({"vit": p["vit"], "lm": p["llm"]},
+                {"vit": o["vit"], "lm": o["llm"]})
+
+    @property
+    def in_flight(self) -> int:
+        return self._crt.in_flight
+
+    @property
+    def lookahead(self) -> int:
+        return self._crt.lookahead
+
+    @lookahead.setter
+    def lookahead(self, depth: int) -> None:
+        self._crt.lookahead = int(depth)
+
+    def submit_iteration(self, batch, step_idx, *,
+                         reorder: bool = True,
+                         plan: Optional[IterationPlan] = None,
+                         return_grads: bool = False,
+                         timeout: float = 300.0) -> int:
+        if plan is None:
+            plan = self.plan_iteration(np.asarray(batch["has_image"]),
+                                       reorder=reorder)
+        return self._crt.submit_iteration(
+            batch, step_idx, plan=plan, return_grads=return_grads,
+            timeout=timeout)
+
+    def retire(self, *, timeout: float = 300.0):
+        metrics = self._crt.retire(timeout=timeout)
+        return self._remap_metrics(metrics, "grads" in metrics)
+
+    def drain(self, *, timeout: float = 300.0):
+        return [self._remap_metrics(m, "grads" in m)
+                for m in self._crt.drain(timeout=timeout)]
 
     def shutdown(self):
         self._crt.shutdown()

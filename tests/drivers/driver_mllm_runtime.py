@@ -93,12 +93,14 @@ print("mixed batch: disaggregated == colocated oracle (bit-for-bit)")
 ex = m["execution"]
 ends = {(e.section, e.tag): e.end for e in ex.timeline}
 assert set(ex.dispatch_order["vit"]) == \
-    {f"fwd{i}" for i in plan.image_mbs} | {f"bwd{i}" for i in plan.image_mbs}
+    {f"fwd{i}" for i in plan.image_mbs} | \
+    {f"bwd{i}" for i in plan.image_mbs} | {"upd"}
 for i in plan.image_mbs:
     assert ends[("vit", f"fwd{i}")] <= ends[("llm", f"mb{i}")]
     assert ends[("vit", f"fwd{i}")] <= ends[("vit", f"bwd{i}")]
 assert m["n_vit_tasks"] == 2 * len(plan.image_mbs)
-assert rt.rt.queue.stats()["pushes"] == 2 * len(plan.image_mbs)
+# embeddings + cotangents, plus the 2-push joint grad-norm rendezvous
+assert rt.rt.queue.stats()["pushes"] == 2 * len(plan.image_mbs) + 2
 
 # ---- all-text batch: the vision section never fires ------------------- #
 data_text = vlm_batches(batch=B, seq_len=S, vocab=256, vision_ratio=0.0,
@@ -110,10 +112,12 @@ assert tplan.image_mbs == ()
 pushes_before = rt.rt.queue.stats()["pushes"]
 params3, opts3, tm = rt.train_iteration(params2, opts2, tbatch, 1,
                                         plan=tplan, return_grads=True)
-assert rt.rt.queue.stats()["pushes"] == pushes_before, \
-    "all-text batch must produce zero cross-section traffic"
+assert rt.rt.queue.stats()["pushes"] == pushes_before + 2, \
+    "all-text batch: gnorm rendezvous only, zero activation traffic"
 assert tm["n_vit_tasks"] == 0
-assert not any(e.section == "vit" for e in tm["execution"].timeline)
+assert [e.tag for e in tm["execution"].timeline
+        if e.section == "vit"] == ["upd"], \
+    "idle vision section runs only its (exact-zero-grad) update"
 
 onew_p2, onew_opt2, otm = ostep(onew_p, onew_opt,
                                 colocated_batch(tbatch, tplan),
@@ -215,8 +219,50 @@ for sec in ("lm", "vit"):
 ex3 = mcp["execution"]
 assert set(ex3.dispatch_order["vit"]) == \
     {f"fwd{i}" for i in cp_plan.image_mbs} | \
-    {f"bwd{i}" for i in cp_plan.image_mbs}
+    {f"bwd{i}" for i in cp_plan.image_mbs} | {"upd"}
 print("ViT-CP section (dp=2, cp=2): runs through the executor, "
       "loss/grads/params match the oracle")
 rt3.shutdown()
+
+# ---- streaming with cross-iteration lookahead ENABLED: three pipelined
+# iterations through submit/retire must stay bit-for-bit with the oracle
+# stepped three times — removing the global barrier must not change a
+# single bit of the training trajectory ------------------------------------ #
+rt4 = MLLMRuntime(vit_cfg, lm_cfg,
+                  vit_parallel=ParallelConfig(dp=4),
+                  lm_parallel=ParallelConfig(dp=4),
+                  global_batch=B, seq_len=S, mbs=MBS,
+                  impl="ref", opt_cfg=opt_cfg, lookahead=1)
+params_s, opts_s = rt4.place(params_host)
+rt4.install(params_s, opts_s)
+op4 = jax.device_put(params_host, oshard["params"])
+oo4 = jax.device_put(adamw.init(op4), oshard["opt"])
+sbatches = [next(data) for _ in range(3)]
+splans = []
+max_inflight = 0
+for i, b in enumerate(sbatches):
+    pl = rt4.plan_iteration(np.asarray(b["has_image"]), reorder=True)
+    splans.append(pl)
+    rt4.submit_iteration(b, i, plan=pl)
+    max_inflight = max(max_inflight, rt4.in_flight)
+assert max_inflight == 2, \
+    f"lookahead=1 must pipeline two iterations in flight: {max_inflight}"
+ms = rt4.drain()
+assert rt4.in_flight == 0 and len(ms) == 3
+params_s2, opts_s2 = rt4.state()
+oms = []
+for i, b in enumerate(sbatches):
+    op4, oo4, om_i = ostep(op4, oo4, colocated_batch(b, splans[i]),
+                           jnp.int32(i))
+    oms.append(om_i)
+for i in range(3):
+    np.testing.assert_array_equal(
+        np.asarray(ms[i]["loss"]), np.asarray(oms[i]["loss"]),
+        err_msg=f"streaming loss, iteration {i}")
+tree_equal(params_s2["lm"], op4["lm"], "streamed lm params after 3 iters")
+tree_equal(params_s2["vit"], op4["vit"],
+           "streamed vit params after 3 iters")
+print("streaming lookahead=1: three pipelined iterations bit-for-bit "
+      "with the oracle trajectory")
+rt4.shutdown()
 print("DRIVER_OK mllm_runtime")

@@ -74,7 +74,7 @@ params2, opts2, m = rt.train_iteration(params, opts, batch, 0, plan=plan,
 ex = m["execution"]
 assert ex.task_counts["teacher_a"] == plan.n_mb
 assert ex.task_counts.get("teacher_b", 0) == len(act.active_mbs)
-assert ex.task_counts["student"] == plan.n_mb
+assert ex.task_counts["student"] == plan.n_mb + 1   # mbs + worker-side upd
 assert m["n_tasks"] == ex.task_counts
 ends = {(e.section, e.tag): e.end for e in ex.timeline}
 for i in act.active_mbs:

@@ -226,3 +226,103 @@ def test_executor_raises_on_failing_dispatch():
         # not satisfy (or pollute) the next run's drain
         res = ex.run([Dispatch("a", "ok", lambda: 7)])
         assert res.results == {("a", "ok"): 7}
+
+
+def test_stale_task_error_after_abort_is_logged(caplog):
+    """Satellite fix: a poisoned task landing after its iteration already
+    aborted used to vanish without a trace — it must be logged."""
+    import logging
+
+    with CompoundExecutor(sections=["a"]) as ex:
+        s = ex.session()
+
+        def late_failure():
+            time.sleep(0.2)
+            raise ValueError("late-inner")
+
+        with caplog.at_level(logging.WARNING, logger="repro.executor"):
+            s.submit(0, [Dispatch("a", "boom",
+                                  lambda: (_ for _ in ()).throw(
+                                      ValueError("inner"))),
+                         Dispatch("a", "late", late_failure)])
+            with pytest.raises(RuntimeError, match=r"'boom'"):
+                s.retire(0)
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline and not caplog.records:
+                time.sleep(0.01)
+        assert any("stale TaskError" in r.getMessage()
+                   and "late-inner" in r.getMessage()
+                   for r in caplog.records)
+
+
+# --------------------------------------------------------------------------- #
+# Cross-iteration streaming (tentpole)
+# --------------------------------------------------------------------------- #
+def test_stream_overlap_invariants():
+    """With lookahead, section A's fwd(i+1) may start before section B's
+    upd(i) ends — but never before A's OWN upd(i) (per-section FIFO)."""
+    with CompoundExecutor(sections=["a", "b"]) as ex:
+        s = ex.session()
+
+        def work(dt):
+            def fn():
+                time.sleep(dt)
+                return dt
+            return fn
+
+        def iteration(i):
+            return [Dispatch("a", "fwd", work(0.01)),
+                    Dispatch("a", "upd", work(0.01)),
+                    Dispatch("b", "fwd", work(0.01)),
+                    Dispatch("b", "upd", work(0.3))]   # slow straggler
+
+        s.submit(0, iteration(0))
+        s.submit(1, iteration(1))
+        assert s.in_flight == 2
+        r0 = s.retire(0)
+        r1 = s.retire(1)
+        assert s.in_flight == 0
+
+        def abs_times(res, section, tag):
+            (e,) = [e for e in res.timeline
+                    if e.section == section and e.tag == tag]
+            return res.t0 + e.start, res.t0 + e.end
+
+        a_upd0_end = abs_times(r0, "a", "upd")[1]
+        b_upd0_end = abs_times(r0, "b", "upd")[1]
+        a_fwd1_start = abs_times(r1, "a", "fwd")[0]
+        # A streams into iteration 1 behind its own update...
+        assert a_fwd1_start >= a_upd0_end
+        # ...without waiting for B's straggling update (the old barrier)
+        assert a_fwd1_start < b_upd0_end
+
+
+def test_stream_serialized_depth_matches_run_completion_order():
+    """Submit-then-retire one iteration at a time (lookahead depth 0)
+    must realize exactly the per-section completion order of the old
+    barriered CompoundExecutor.run on the same dispatch list."""
+    order, _ = order_samples(hetero_samples(), reorder=True)
+
+    def per_section(res):
+        return {s: [t for sec, t in res.completion_order if sec == s]
+                for s in ("bc", "c")}
+
+    with CompoundExecutor(sections=["bc", "c"]) as ex:
+        barriered = per_section(
+            ex.run(_producer_consumer_dispatches(ex, order, it="r")))
+    with CompoundExecutor(sections=["bc", "c"]) as ex:
+        s = ex.session()
+        s.submit(0, _producer_consumer_dispatches(ex, order, it="s"))
+        res = s.retire(0)
+        assert per_section(res) == barriered
+        for i in order:
+            assert res.results[("c", f"c{i}")] == float(i)
+
+
+def test_stream_iteration_indices_must_increase():
+    with CompoundExecutor(sections=["a"]) as ex:
+        s = ex.session()
+        s.submit(3, [Dispatch("a", "t", lambda: 1)])
+        with pytest.raises(AssertionError, match=r"strictly increasing"):
+            s.submit(3, [Dispatch("a", "t", lambda: 1)])
+        s.retire(3)

@@ -95,3 +95,64 @@ def test_pull_timeout():
     q = MessageQueue()
     with pytest.raises(TimeoutError):
         q.pull("a", "b", "missing", timeout=0.1)
+
+
+# --------------------------------------------------------------------------- #
+# Diagnosability (satellite): per-edge stats, pending keys in timeouts
+# --------------------------------------------------------------------------- #
+def test_stats_per_edge_depth_pending_bytes():
+    q = MessageQueue()
+    q.push("a", "b", "s0/x", jnp.zeros((4, 2), jnp.float32))
+    q.push("a", "b", "s0/y", jnp.zeros((8,), jnp.float32))
+    q.push("b", "c", "s0/z", jnp.zeros((2,), jnp.float32))
+    st = q.stats()
+    assert st["pushes"] == 3 and st["channels"] == 2
+    ab = st["edges"]["a->b"]
+    assert ab["depth"] == 2
+    assert ab["pending"] == ["s0/x", "s0/y"]
+    assert ab["bytes"] == (4 * 2 + 8) * 4
+    assert st["edges"]["b->c"] == {"depth": 1, "pending": ["s0/z"],
+                                   "bytes": 2 * 4}
+    q.pull("a", "b", "s0/x")
+    st2 = q.stats()
+    assert st2["edges"]["a->b"]["pending"] == ["s0/y"]
+    assert st2["edges"]["a->b"]["bytes"] == 8 * 4
+
+
+def test_pull_timeout_reports_pending_keys():
+    """The timeout error must name what IS buffered on the edge — a
+    stale-scope or typo'd key is diagnosed from the message alone."""
+    q = MessageQueue()
+    q.push("a", "b", "s0/emb.0", jnp.zeros((2,)))
+    with pytest.raises(TimeoutError, match=r"s1/emb\.0.*s0/emb\.0"):
+        q.pull("a", "b", "s1/emb.0", timeout=0.1)
+
+
+# --------------------------------------------------------------------------- #
+# Iteration-scoped namespaces (streaming tentpole)
+# --------------------------------------------------------------------------- #
+def test_evict_scope_drops_leftovers_and_seals_namespace():
+    q = MessageQueue()
+    q.push("a", "b", "s0/left", jnp.zeros((2,)))
+    q.push("a", "b", "s1/keep", jnp.ones((2,)))
+    q.push("a", "b", "unscoped", jnp.ones((3,)))
+    evicted = q.evict_scope("s0")
+    assert evicted == {"a->b": ["s0/left"]}
+    # the retired namespace is sealed in both directions
+    with pytest.raises(RuntimeError, match=r"scope 's0'.*retired"):
+        q.push("a", "b", "s0/late", jnp.zeros((1,)))
+    with pytest.raises(RuntimeError, match=r"scope 's0'.*retired"):
+        q.pull("a", "b", "s0/left", timeout=0.1)
+    # other scopes and unscoped keys are untouched
+    np.testing.assert_array_equal(np.asarray(q.pull("a", "b", "s1/keep")),
+                                  np.ones((2,), np.float32))
+    np.testing.assert_array_equal(np.asarray(q.pull("a", "b", "unscoped")),
+                                  np.ones((3,), np.float32))
+    assert q.stats()["edges"]["a->b"]["depth"] == 0
+
+
+def test_evict_scope_clean_iteration_reports_nothing():
+    q = MessageQueue()
+    q.push("a", "b", "s7/x", jnp.zeros((2,)))
+    q.pull("a", "b", "s7/x")
+    assert q.evict_scope("s7") == {}

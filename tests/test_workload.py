@@ -224,3 +224,93 @@ def test_build_activation_none_active():
     act = wl.build_activation(list(range(4)), np.zeros(4, bool), 2)
     assert act.active_mbs == ()
     assert not act.valid.any()
+
+
+# --------------------------------------------------------------------- #
+# streaming execution (single section, single device)
+# --------------------------------------------------------------------- #
+def test_streaming_lookahead_matches_serialized_trajectory():
+    """Three iterations through install/submit_iteration/retire with
+    lookahead=1 must be bitwise the trajectory train_iteration (the
+    serialized wrapper) produces — the worker-side update and the
+    removed barrier change scheduling only, never arithmetic."""
+    import jax
+    from repro.models.model import build_model
+
+    cfg = _cfg()
+    model = build_model(cfg, impl="ref")
+
+    def lm_fn(p, x):
+        return model.loss(p, {"tokens": x["tokens"],
+                              "labels": x["labels"]})[0]
+
+    sec = wl.SectionSpec(
+        "lm", cfg, ParallelConfig(), fn=lm_fn, params=model.specs(),
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32"),
+                "labels": wl.Field((wl.SEQ,), "int32")},
+        loss=True, critical=True)
+    spec = wl.WorkloadSpec("lm-only", (sec,), seq_len=8,
+                           global_batch=4, mbs=2)
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, 64, (4, 8)).astype(np.int32),
+                "labels": rng.integers(0, 64, (4, 8)).astype(np.int32)}
+               for _ in range(3)]
+    with wl.CompoundRuntime(spec, lookahead=1) as rt:
+        # serialized reference trajectory (fresh opt state)
+        p, o = rt.init(jax.random.PRNGKey(0))
+        ref_losses = []
+        for i, b in enumerate(batches):
+            p, o, m = rt.train_iteration(p, o, b, i)
+            ref_losses.append(np.asarray(m["loss"]))
+
+        # streamed trajectory from the same init, two iterations in flight
+        p2, o2 = rt.init(jax.random.PRNGKey(0))
+        rt.install(p2, o2)
+        max_inflight = 0
+        for i, b in enumerate(batches):
+            rt.submit_iteration(b, i)
+            max_inflight = max(max_inflight, rt.in_flight)
+        ms = rt.drain()
+        assert max_inflight == 2 and rt.in_flight == 0
+        p3, _ = rt.state()
+        for i in range(3):
+            np.testing.assert_array_equal(np.asarray(ms[i]["loss"]),
+                                          ref_losses[i], err_msg=f"it {i}")
+        for a, b in zip(jax.tree_util.tree_leaves(p["lm"]),
+                        jax.tree_util.tree_leaves(p3["lm"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_iteration_rejects_inflight_stream():
+    """The serialized wrapper must refuse to interleave with an open
+    stream (its retire would steal the streamed iteration's metrics)."""
+    import jax
+    from repro.models.model import build_model
+
+    cfg = _cfg()
+    model = build_model(cfg, impl="ref")
+
+    def lm_fn(p, x):
+        return model.loss(p, {"tokens": x["tokens"],
+                              "labels": x["labels"]})[0]
+
+    sec = wl.SectionSpec(
+        "lm", cfg, ParallelConfig(), fn=lm_fn, params=model.specs(),
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32"),
+                "labels": wl.Field((wl.SEQ,), "int32")},
+        loss=True, critical=True)
+    spec = wl.WorkloadSpec("lm-only", (sec,), seq_len=8,
+                           global_batch=4, mbs=2)
+    rng = np.random.default_rng(1)
+    b = {"tokens": rng.integers(0, 64, (4, 8)).astype(np.int32),
+         "labels": rng.integers(0, 64, (4, 8)).astype(np.int32)}
+    with wl.CompoundRuntime(spec, lookahead=2) as rt:
+        p, o = rt.init(jax.random.PRNGKey(0))
+        rt.install(p, o)
+        rt.submit_iteration(b, 0)
+        with pytest.raises(RuntimeError, match="serialized wrapper"):
+            rt.train_iteration(p, o, b, 1)
+        with pytest.raises(RuntimeError, match="quiescent"):
+            rt.install(p, o)
+        (m,) = rt.drain()
+        assert np.isfinite(np.asarray(m["loss"]))
