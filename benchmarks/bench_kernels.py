@@ -17,8 +17,9 @@ from repro.kernels.ssd_scan import ssd_chunked_jnp
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warmup call: the old `isinstance(fn(*args), tuple)` probe
+    # re-executed fn, dispatching the (possibly expensive) program twice
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         r = fn(*args)

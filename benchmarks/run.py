@@ -12,6 +12,10 @@ Prints ``name,us_per_call,derived`` CSV.  Figure mapping:
 bench and writes its JSON — wavefront-vs-FIFO plus overlap-on-vs-off —
 to ``BENCH_vlm_realized.json`` at the repo root, where it is committed
 so the realized-performance trajectory is tracked in-tree.
+``--step-roofline`` runs the HLO-derived distributed-step scoreboard
+(vocab-parallel CE FLOPs, TP-in-stage FLOPs, compressed DP all-reduce
+wire bytes — each asserted, see bench_step_roofline.py) and writes
+``BENCH_step_roofline.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -56,6 +60,33 @@ def vlm_realized(smoke: bool) -> None:
     print(f"overlap_vit_util_gain,{ov['vit_util_gain']:.4f}", flush=True)
 
 
+def step_roofline() -> None:
+    """Run bench_step_roofline in its own interpreter (8 virtual devices)
+    and record the scoreboard at the repo root.  The bench asserts the
+    perf claims itself; a regression fails this command."""
+    env = dict(os.environ, PYTHONPATH=str(_ROOT / "src"))
+    cmd = [sys.executable, str(_ROOT / "benchmarks" /
+                               "bench_step_roofline.py")]
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=1800)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        sys.exit(proc.returncode)
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    out = _ROOT / "BENCH_step_roofline.json"
+    out.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+    print(f"vp_ce_unembed_flop_reduction,{data['vp_ce']['reduction']:.4f}",
+          flush=True)
+    print("tp_in_stage_ffn_flop_reduction,"
+          f"{data['tp_in_stage']['reduction']:.4f}", flush=True)
+    c = data["compress"]
+    print(f"grad_wire_bf16_over_fp32,{c['bf16_over_fp32']:.4f}",
+          flush=True)
+    print(f"grad_wire_int8_over_fp32,{c['int8_over_fp32']:.4f}",
+          flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -64,10 +95,17 @@ def main() -> None:
                     help="run the executed MLLM bench (subprocess, 8 "
                          "virtual devices) and write "
                          "BENCH_vlm_realized.json at the repo root")
+    ap.add_argument("--step-roofline", action="store_true",
+                    help="run the HLO-derived distributed-step scoreboard "
+                         "(subprocess, 8 virtual devices) and write "
+                         "BENCH_step_roofline.json at the repo root")
     args = ap.parse_args()
 
     if args.vlm_realized:
         vlm_realized(args.smoke)
+        return
+    if args.step_roofline:
+        step_roofline()
         return
 
     names = ["scheduler"]

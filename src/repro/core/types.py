@@ -200,6 +200,10 @@ class ParallelConfig:
     remat: bool = True
     zero_opt: bool = True   # shard optimizer state over the data axis
     sequence_parallel: bool = False
+    grad_compress: str = "none"   # DP grad all-reduce wire format:
+    #   "none" | "bf16" | "int8" (int8 adds error feedback) — see
+    #   repro.optim.compression; consumed by the plain-regime train step
+    #   and by CompoundRuntime's per-section update dispatch
 
     @property
     def devices(self) -> int:

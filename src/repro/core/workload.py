@@ -34,6 +34,14 @@ bit-for-bit equivalent to its colocated oracle with):
   order, are normalized by ``n_mb`` once, and per-section *jitted* AdamW
   updates share one joint grad-norm across all trainable sections (the
   colocated clipping semantics — ``adamw.update(gnorm=)``);
+* a section with ``ParallelConfig.grad_compress`` ∈ {"bf16", "int8"}
+  defers its DP gradient all-reduce to the ``upd`` dispatch and runs it
+  compressed (``repro.optim.compression``): its grad/bwd jits move into
+  a shard_map over the data axis and emit stacked per-shard partial
+  grads ``[dp, ...]`` (the local loss carries a 1/dp scale so partials
+  sum to the DP mean and port cotangents keep colocated scale), and the
+  int8 error-feedback residual threads across iterations per section
+  (zero-init at first ``install()``, preserved after);
 * each trainable section's grad-finalize + AdamW update runs as an
   ``upd`` Dispatch on *that section's own worker* (not the main thread):
   the joint grad-norm is a small cross-worker rendezvous of per-leaf
@@ -69,6 +77,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import cost_model as cmdl
 from repro.core.executor import Dispatch, mark_start, order_samples
@@ -80,12 +89,24 @@ from repro.dist import sharding as shd
 from repro.models import attention as att
 from repro.models import common as cm
 from repro.optim import adamw, schedules
+from repro.optim import compression as gcomp
 
 #: symbolic sequence-length dim in Field / Port shapes, resolved to the
 #: workload's seq_len at build time (static dims stay ints)
 SEQ = "S"
 
 _log = logging.getLogger("repro.workload")
+
+
+def _spec_has_axis(spec, axis: str) -> bool:
+    """Whether a PartitionSpec mentions ``axis`` in any dim entry."""
+    for entry in spec:
+        if entry is None:
+            continue
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        if axis in entries:
+            return True
+    return False
 
 
 def _np_dtype(dt):
@@ -492,6 +513,10 @@ class CompoundRuntime:
         self._retired: "collections.deque[dict]" = collections.deque()
         self._params: Dict[str, Any] = {}
         self._opts: Dict[str, Any] = {}
+        #: per-compressed-section stacked [dp, ...] error-feedback
+        #: residual — zero-init at first install(), then threaded across
+        #: iterations by the section's own ``upd`` dispatch
+        self._ef: Dict[str, Any] = {}
         self._installed = False
         self._topo = spec.topo_order()
         self._crit = spec.critical.name
@@ -506,11 +531,56 @@ class CompoundRuntime:
             self._regime[s.name] = validate_section_parallel(
                 s.name, s.arch, self.rt.parallel(s.name),
                 self.rt.mesh(s.name))
+        # per-section DP grad-compression knob (ParallelConfig.grad_compress
+        # → repro.optim.compression): validated here, realized as stacked
+        # per-shard partial grads in the section's grad/bwd jits plus ONE
+        # compressed all-reduce in its worker-side ``upd`` dispatch
+        self._compress: Dict[str, str] = {}
+        self._comp_dp: Dict[str, int] = {}
+        for s in spec.sections:
+            method = self.rt.parallel(s.name).grad_compress or "none"
+            if method == "none":
+                continue
+            if method not in gcomp.METHODS:
+                raise ValueError(
+                    f"section {s.name!r}: grad_compress={method!r} — "
+                    f"expected one of {gcomp.METHODS}")
+            if not s.trainable:
+                raise ValueError(
+                    f"section {s.name!r}: grad_compress on a fwd_only "
+                    "section — frozen sections produce no gradients")
+            mesh = self.rt.mesh(s.name)
+            sizes = dict(mesh.shape)
+            if self._regime[s.name] != "plain" or any(
+                    sizes.get(a, 1) > 1
+                    for a in (shd.AXIS_PIPE, shd.AXIS_SEQ, shd.AXIS_MODEL)):
+                raise NotImplementedError(
+                    f"section {s.name!r}: grad_compress requires the plain "
+                    "regime on a dp-only mesh — the compressed all-reduce "
+                    "runs in a shard_map over the data axis and cannot "
+                    "nest inside cp schedules or compose with tp "
+                    "activation sharding")
+            das = shd.dp_axes(mesh)
+            if len(das) != 1:
+                raise NotImplementedError(
+                    f"section {s.name!r}: grad_compress needs exactly one "
+                    f"data axis on the section mesh (got {das!r})")
+            by = {x.name: x for x in spec.sections}
+            for c in s.consumes:
+                if by[c.section].activation is not None:
+                    raise NotImplementedError(
+                        f"section {s.name!r}: grad_compress on a consumer "
+                        f"of activation-predicated section {c.section!r} "
+                        "— the capacity-row → sample-slot scatter crosses "
+                        "the batch dim the compressed shard_map shards")
+            self._compress[s.name] = method
+            self._comp_dp[s.name] = sizes[das[0]]
         # shape-independent state: param/opt shardings, update/ssq jits
         self._p_shard: Dict[str, Any] = {}
         self._o_shard: Dict[str, Any] = {}
         self._update: Dict[str, Any] = {}
         self._ssq: Dict[str, Any] = {}
+        self._compress_step: Dict[str, Any] = {}
         for s in spec.sections:
             mesh = self.rt.mesh(s.name)
             rules = shd.rules_for(s.arch, mesh, teacher=not s.trainable)
@@ -551,6 +621,9 @@ class CompoundRuntime:
             # square+sum subgraph an in-jit global_norm runs
             self._ssq[s.name] = jax.jit(ssq_vec, in_shardings=(p_sh,),
                                         out_shardings=rep)
+            if s.name in self._compress:
+                self._compress_step[s.name] = self._make_compress_step(
+                    s.name, self._compress[s.name], p_sh)
         self._built: Optional[Tuple[int, int, int]] = None
         if spec.global_batch is not None and spec.seq_len is not None:
             self._build(spec.global_batch, spec.seq_len,
@@ -636,6 +709,12 @@ class CompoundRuntime:
                 raise ValueError(
                     f"section {name!r}: sequence length {sec_seq} does "
                     f"not divide the mesh {shd.AXIS_SEQ!r} axis ({cp})")
+            if name in self._compress and mbs % self._comp_dp[name]:
+                raise NotImplementedError(
+                    f"section {name!r}: grad_compress needs the "
+                    f"microbatch size ({mbs}) to divide the data axis "
+                    f"({self._comp_dp[name]}) so every shard owns a real "
+                    "slice of the batch")
             from repro.train.step import _act_hook_for
             hook = _act_hook_for(mesh, mbs, sec_seq or 1)
             if self._regime[name] == "cp":
@@ -698,6 +777,191 @@ class CompoundRuntime:
         return [c.key for c in s.consumes
                 if by_name[c.section].trainable]
 
+    # ------------------------------------------------------------------ #
+    # DP grad compression (ParallelConfig.grad_compress): the section's
+    # grad/bwd jits move into a shard_map over the data axis and emit
+    # STACKED per-shard partial grads [dp, ...] instead of XLA's
+    # implicitly all-reduced full grads; the reduce is deferred to the
+    # section's ``upd`` dispatch where it runs compressed.
+    # ------------------------------------------------------------------ #
+    def _make_compress_step(self, name: str, method: str, p_sh):
+        """Jitted compressed grad-finalize for one section: stacked
+        per-shard f32 partial grads ``[dp, ...]`` plus the stacked
+        error-feedback residual → ONE compressed all-reduce over the data
+        axis (``repro.optim.compression``) → (param-dtype reduced grads,
+        new stacked residual).  Replaces the eager ``(g / n_mb).astype``
+        finalize in ``upd_task``; 1/n_mb folds in via ``inv_n``."""
+        mesh = self.rt.mesh(name)
+        da = shd.dp_axes(mesh)[0]
+        rep = shd.replicated(mesh)
+        ef_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(da)), p_sh)
+        shapes = cm.param_shapes(self.spec.section(name).params)
+
+        def finalize(g_stacked, ef_stacked, inv_n):
+            g = jax.tree_util.tree_map(lambda x: x[0] * inv_n, g_stacked)
+            ef = gcomp.ErrorFeedback(jax.tree_util.tree_map(
+                lambda x: x[0], ef_stacked))
+            # mean=False: the partial grads already carry the 1/dp the
+            # loss was scaled by, so the compressed SUM is the DP mean
+            red, new_ef = gcomp.ef_compress_tree(g, ef, da, method,
+                                                 mean=False)
+            red = jax.tree_util.tree_map(
+                lambda r, sp: r.astype(sp.dtype), red, shapes)
+            return red, jax.tree_util.tree_map(lambda x: x[None],
+                                               new_ef.residual)
+
+        run = shd.shard_map(finalize, mesh, (P(da), P(da), P()),
+                            (P(), P(da)))
+        # donate only the residual: the reduced grads are param-shaped,
+        # so the stacked-grad buffer has no donatable consumer (warning)
+        return jax.jit(run, in_shardings=(ef_sh, ef_sh, rep),
+                       out_shardings=(p_sh, ef_sh),
+                       donate_argnums=(1,))
+
+    def _ef_init(self, name: str, params) -> Any:
+        """Zero-initialized stacked [dp, ...] error-feedback residual for
+        one compressed section, placed on its data axis."""
+        mesh = self.rt.mesh(name)
+        da = shd.dp_axes(mesh)[0]
+        dpn = self._comp_dp[name]
+        z = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((dpn,) + x.shape, jnp.float32), params)
+        return jax.device_put(
+            z, jax.tree_util.tree_map(
+                lambda _: NamedSharding(mesh, P(da)), z))
+
+    def _sharded_grad_jit(self, s: SectionSpec, p_sh, ct_sh, rest_sh,
+                          rep):
+        """Compressed critical section: loss + grads run in a shard_map
+        over the data axis, each shard seeing only its local batch slice.
+        The local loss is scaled 1/dp inside so (a) the stacked partial
+        grads sum to the DP-mean gradient and (b) pushed port cotangents
+        keep the colocated per-element scale.  The reported loss/aux are
+        the psum of the scaled locals — the mean over shards, which for
+        sample-decomposable losses matches the colocated global mean
+        within fp tolerance (masked means deviate only when the mask is
+        unbalanced across shards; documented in docs/perf.md)."""
+        name = s.name
+        mesh = self.rt.mesh(name)
+        da = shd.dp_axes(mesh)[0]
+        dp = self._comp_dp[name]
+        _fn, _aux = s.fn, s.loss_aux
+        p_specs = jax.tree_util.tree_map(lambda sh: sh.spec, p_sh)
+        rest_specs = {k: sh.spec for k, sh in rest_sh.items()}
+        g_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(da)), p_sh)
+
+        def scaled(p, inputs):
+            # act-hook sharding constraints are illegal inside shard_map
+            with cm.act_hook(None):
+                val = _fn(p, inputs)
+            if _aux:
+                return val[0] / dp, val[1]
+            return val / dp
+
+        def reduce_val(val):
+            if _aux:
+                return (jax.lax.psum(val[0], da),
+                        jax.tree_util.tree_map(
+                            lambda a: jax.lax.psum(a / dp, da), val[1]))
+            return jax.lax.psum(val, da)
+
+        def stack32(g):
+            return jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32)[None], g)
+
+        if ct_sh is not None:
+            ct_specs = {k: sh.spec for k, sh in ct_sh.items()}
+
+            def grad_fn(params, cts, rest):
+                def f(p, c):
+                    return scaled(p, {**rest, **c})
+                val, (g_p, g_c) = jax.value_and_grad(
+                    f, argnums=(0, 1), has_aux=_aux)(params, cts)
+                # a replicated ct input sees identical local grads that
+                # are each a PARTIAL derivative → reduce; batch-sharded
+                # cts assemble shard-local slices as-is
+                g_c = {k: (v if _spec_has_axis(ct_specs[k], da)
+                           else jax.lax.psum(v, da))
+                       for k, v in g_c.items()}
+                return reduce_val(val), stack32(g_p), g_c
+
+            run = shd.shard_map(grad_fn, mesh,
+                                (p_specs, ct_specs, rest_specs),
+                                (P(), P(da), ct_specs))
+            return jax.jit(run, in_shardings=(p_sh, ct_sh, rest_sh),
+                           out_shardings=(rep, g_sh, ct_sh))
+
+        def grad_fn(params, rest):
+            def f(p):
+                return scaled(p, rest)
+            val, g_p = jax.value_and_grad(f, has_aux=_aux)(params)
+            return reduce_val(val), stack32(g_p)
+
+        run = shd.shard_map(grad_fn, mesh, (p_specs, rest_specs),
+                            (P(), P(da)))
+        return jax.jit(run, in_shardings=(p_sh, rest_sh),
+                       out_shardings=(rep, g_sh))
+
+    def _sharded_bwd_jit(self, s: SectionSpec, p_sh, ct_sh, rest_sh,
+                         all_in_sh, ct_out_sh):
+        """Compressed trainable producer: the vjp runs in a shard_map over
+        the data axis against the shard-local slice of the pulled
+        cotangents (which already carry the colocated global scale), so
+        the stacked per-shard partial grads sum to the full gradient."""
+        name = s.name
+        mesh = self.rt.mesh(name)
+        da = shd.dp_axes(mesh)[0]
+        _fn = s.fn
+        p_specs = jax.tree_util.tree_map(lambda sh: sh.spec, p_sh)
+        ct_out_specs = {k: sh.spec for k, sh in ct_out_sh.items()}
+        g_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(da)), p_sh)
+
+        def call(p, inputs):
+            with cm.act_hook(None):
+                return _fn(p, inputs)
+
+        def stack32(g):
+            return jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32)[None], g)
+
+        if ct_sh is not None:
+            ct_specs = {k: sh.spec for k, sh in ct_sh.items()}
+            rest_specs = {k: sh.spec for k, sh in rest_sh.items()}
+
+            def bwd_fn(params, cts_in, rest, cts):
+                def f(p, c):
+                    return call(p, {**rest, **c})
+                _, vjp = jax.vjp(f, params, cts_in)
+                g_p, g_c = vjp(cts)
+                g_c = {k: (v if _spec_has_axis(ct_specs[k], da)
+                           else jax.lax.psum(v, da))
+                       for k, v in g_c.items()}
+                return stack32(g_p), g_c
+
+            run = shd.shard_map(
+                bwd_fn, mesh,
+                (p_specs, ct_specs, rest_specs, ct_out_specs),
+                (P(da), ct_specs))
+            return jax.jit(
+                run, in_shardings=(p_sh, ct_sh, rest_sh, ct_out_sh),
+                out_shardings=(g_sh, ct_sh))
+
+        all_in_specs = {k: sh.spec for k, sh in all_in_sh.items()}
+
+        def bwd_fn(params, inputs, cts):
+            def f(p):
+                return call(p, inputs)
+            _, vjp = jax.vjp(f, params)
+            return stack32(vjp(cts)[0])
+
+        run = shd.shard_map(bwd_fn, mesh,
+                            (p_specs, all_in_specs, ct_out_specs), P(da))
+        return jax.jit(run, in_shardings=(p_sh, all_in_sh, ct_out_sh),
+                       out_shardings=g_sh)
+
     def _build_jits(self, by_name: Dict[str, SectionSpec]) -> None:
         for name in self._topo:
             s = by_name[name]
@@ -716,6 +980,12 @@ class CompoundRuntime:
                 rest_sh = {**in_sh, **{k: v for k, v in pull_sh.items()
                                        if k not in ct_keys}}
                 self._grad_has_ct = bool(ct_keys)
+                if name in self._compress:
+                    ct_sh = ({k: pull_sh[k] for k in ct_keys}
+                             if ct_keys else None)
+                    self._grad = self._sharded_grad_jit(s, p_sh, ct_sh,
+                                                        rest_sh, rep)
+                    continue
                 if ct_keys:
                     ct_sh = {k: pull_sh[k] for k in ct_keys}
 
@@ -756,6 +1026,18 @@ class CompoundRuntime:
             if not s.trainable:
                 continue
             ct_out_sh = self._ct_pull_shard[name]
+            if name in self._compress:
+                if ct_keys:
+                    ct_sh = {k: pull_sh[k] for k in ct_keys}
+                    rest_keys_sh = {**in_sh,
+                                    **{k: v for k, v in pull_sh.items()
+                                       if k not in ct_keys}}
+                    self._bwd[name] = self._sharded_bwd_jit(
+                        s, p_sh, ct_sh, rest_keys_sh, None, ct_out_sh)
+                else:
+                    self._bwd[name] = self._sharded_bwd_jit(
+                        s, p_sh, None, None, all_in_sh, ct_out_sh)
+                continue
             if ct_keys:
                 ct_sh = {k: pull_sh[k] for k in ct_keys}
                 rest_keys_sh = {**in_sh,
@@ -851,6 +1133,11 @@ class CompoundRuntime:
                 self._p_shard[name])
             st = jax.device_put(adamw.init(params[name]),
                                 self._o_shard[name])
+            if name in self._compress:
+                g_stacked = self._ef_init(name, params[name])
+                outs.append(self._compress_step[name](
+                    g_stacked, self._ef_init(name, params[name]),
+                    jnp.float32(1.0)))
             outs.append(self._ssq[name](gs))
             lr = self.lr_fn(jnp.int32(0))
             if self.opt_cfg.clip_norm > 0:
@@ -929,8 +1216,24 @@ class CompoundRuntime:
         if missing_o:
             raise ValueError(f"install: missing optimizer state for "
                              f"trainable sections {sorted(missing_o)}")
+        # donated-buffer guard: the worker-side update jits DONATE the
+        # installed optimizer state, and jax.device_put is a no-copy
+        # identity when the sharding already matches — so re-installing a
+        # tree a previous stream consumed would crash deep inside a
+        # worker jit.  Catch it here with a named error instead.
+        for n in params:
+            adamw.check_live(params[n], f"install: params[{n!r}]")
+        for n in opts:
+            adamw.check_live(opts[n], f"install: opts[{n!r}]")
         self._params = dict(params)
         self._opts = dict(opts)
+        # error-feedback residuals for compressed sections: zero-init on
+        # FIRST install only, preserved across installs — the serialized
+        # train_iteration wrapper installs every step, and resetting EF
+        # there would silently disable the int8 residual carry
+        for name in self._compress:
+            if name not in self._ef:
+                self._ef[name] = self._ef_init(name, self._params[name])
         self._installed = True
 
     def state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
@@ -1084,9 +1387,10 @@ class CompoundRuntime:
                 if g0 is None:
                     # f32 zero seed, like a colocated scan carry — seeding
                     # with the raw param-dtype grad would double-round
+                    # (g_p shapes, not params: compressed sections emit
+                    # stacked [dp, ...] per-shard partial grads)
                     g0 = jax.tree_util.tree_map(
-                        lambda x: jnp.zeros(x.shape, jnp.float32),
-                        self._params[s.name])
+                        lambda x: jnp.zeros(x.shape, jnp.float32), g_p)
                 rec.acc[s.name]["g"] = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), g0, g_p)
                 # block before finishing: the section mesh must be quiet
@@ -1138,16 +1442,25 @@ class CompoundRuntime:
 
         def upd_task(name: str):
             peers = [n for n in trainable if n != name]
+            comp = self._compress.get(name)
 
             def fn():
                 g = rec.acc[name]["g"]
                 if g is None:      # section never dispatched: exact zero
+                    lead = (self._comp_dp[name],) if comp else ()
                     g = jax.tree_util.tree_map(
-                        lambda x: jnp.zeros(x.shape, jnp.float32),
+                        lambda x: jnp.zeros(lead + x.shape, jnp.float32),
                         self._params[name])
-                gs = jax.tree_util.tree_map(
-                    lambda g_, p: (g_ / n_mb).astype(p.dtype), g,
-                    self._params[name])
+                if comp:
+                    # stacked per-shard partial grads → ONE compressed
+                    # all-reduce over the data axis; the error-feedback
+                    # residual threads to the next iteration
+                    gs, self._ef[name] = self._compress_step[name](
+                        g, self._ef[name], jnp.float32(1.0 / n_mb))
+                else:
+                    gs = jax.tree_util.tree_map(
+                        lambda g_, p: (g_ / n_mb).astype(p.dtype), g,
+                        self._params[name])
                 # joint grad-norm rendezvous: every trainable section
                 # pushes its per-leaf sum-of-squares vector to every peer
                 # BEFORE pulling any (pushes never block → no wait cycle),

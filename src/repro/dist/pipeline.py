@@ -26,11 +26,30 @@ are exact (TP then shards parameters at rest via ``rules_for`` but the
 pipeline body computes each stage's layers unsharded per device).
 pp×cp is rejected by the dispatcher.
 
-Known cost (SPMD uniformity): every stage executes the embed and the
-final-norm/unembed/CE program for all microbatches, with non-last-stage
-results masked out — the loss pays ``pp ×`` the unembed FLOPs.  A
-ring-distributed CE (each stage scoring ``n_micro/pp`` microbatches) would
-remove this; tracked in ROADMAP.md open items.
+Vocab-parallel cross-entropy: SPMD uniformity means every stage executes
+the final-norm/unembed/CE program for all microbatches.  Instead of
+masking non-last-stage results (paying ``pp ×`` the unembed FLOPs), the
+unembed projection is sharded over the stage axis — each stage scores its
+``padded_vocab / pp`` vocab slice against the psum-broadcast final hidden
+and the slices combine through a distributed logsumexp (max via
+``pmax`` of a stopped gradient, then ``log ∘ psum`` of the shifted
+exponentials) plus a psum of the gold logit.  The per-device unembed dot
+is ``pp ×`` smaller; the gold/embed-lookup psums are bitwise-exact (each
+element lives on exactly one stage, the rest contribute 0.0) and the
+distributed logsumexp matches ``jax.nn.logsumexp`` to a few ulp (the two
+reassociate the log/exp differently).  Enabled whenever
+``padded_vocab % pp == 0`` (``vocab_parallel="auto"``); the masked path
+remains as the fallback.
+
+Tensor parallelism inside stage bodies: when the mesh has a non-trivial
+``model`` axis, the shard_map in_specs slice attention ``heads`` /
+``kv_heads`` and the FFN ``mlp`` dim over it (Megatron column→row
+pattern), and ``tf._sublayer_fwd`` psums the partial mixer/FFN outputs —
+real compute sharding, not the at-rest-only sharding this builder had
+before.  Gating is per-feature: attention TP needs ``head_pad == 0`` and
+``H % tp == KV % tp == 0`` (contiguous head slices then align with KV
+slices, keeping GQA groups local); FFN TP needs ``d_ff % tp == 0``;
+mamba mixers and the MoE router/expert dims stay replicated.
 
 Axis naming follows ``repro.dist.sharding``: stages live on ``pipe`` when
 the mesh has one, else on ``pod`` (cross-pod PP — DCN-friendly, since only
@@ -46,8 +65,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.types import ArchConfig
-from repro.dist.sharding import (AXIS_DATA, AXIS_PIPE, AXIS_POD,
-                                 axis_size, shard_map)
+from repro.dist.sharding import (AXIS_DATA, AXIS_MODEL, AXIS_PIPE,
+                                 AXIS_POD, axis_size, shard_map)
 from repro.models import common as cm
 from repro.models import transformer as tf
 
@@ -80,19 +99,58 @@ def contiguous_microbatch(tree, t: int, msz: int):
     return jax.tree_util.tree_map(lambda a: a[t * msz:(t + 1) * msz], tree)
 
 
+def _tp_plan(cfg: ArchConfig, mesh, st_ax: str):
+    """(tp_axis, tp_attn, tp_ffn) — which stage-body dims the ``model``
+    axis can shard exactly (see module docstring for the gates)."""
+    tp = dict(mesh.shape).get(AXIS_MODEL, 1)
+    if tp <= 1 or st_ax == AXIS_MODEL:
+        return None, False, False
+    has_attn = any(cfg.is_attn_layer(i) for i in range(cfg.num_layers))
+    tp_attn = (has_attn and cfg.head_pad == 0 and cfg.num_heads % tp == 0
+               and cfg.num_kv_heads > 0 and cfg.num_kv_heads % tp == 0)
+    tp_ffn = cfg.d_ff > 0 and cfg.d_ff % tp == 0
+    if not (tp_attn or tp_ffn):
+        return None, False, False
+    return AXIS_MODEL, tp_attn, tp_ffn
+
+
+def _layer_specs(cfg: ArchConfig, st_ax: str, tp_axis, tp_attn: bool,
+                 tp_ffn: bool):
+    """Per-leaf shard_map in_specs for the stacked ``layers`` tree: the
+    stacked dim on the stage axis, plus — under TP — ``heads``/``kv_heads``
+    (attention) and ``mlp`` (FFN) dims on the model axis, so each shard
+    receives its head/f slice and the stage body computes sharded."""
+    def one(s):
+        entries = []
+        for ax in s.axes:
+            if ax == "layers":
+                entries.append(st_ax)
+            elif tp_attn and ax in ("heads", "kv_heads"):
+                entries.append(tp_axis)
+            elif tp_ffn and ax == "mlp":
+                entries.append(tp_axis)
+            else:
+                entries.append(None)
+        return P(*entries)
+    return cm.tree_map_specs(one, tf.lm_specs(cfg)["layers"])
+
+
 def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
                   stage_axis: Optional[str] = None,
                   data_axis: Optional[str] = None,
                   impl: str = "auto", remat: bool = True,
                   aux_weight: float = 0.01, causal: bool = True,
                   act_hook: Optional[Callable] = None,
+                  vocab_parallel="auto",
                   mb_layout: Callable = contiguous_microbatch) -> Tuple:
     """Returns ``(loss_fn, info)`` — ``loss_fn(params, batch) -> scalar``.
 
     params is the full (un-partitioned) ``tf.lm_specs`` tree; shard_map
-    in_specs place the stacked ``layers`` dim on the stage axis and
-    replicate embed/norm/unembed, so the caller passes ordinary global
-    arrays and the partitioner does the placement.
+    in_specs place the stacked ``layers`` dim on the stage axis (plus
+    head/FFN dims on the model axis under TP, and the vocab dim of the
+    embed/unembed tables on the stage axis under vocab-parallel CE), so
+    the caller passes ordinary global arrays and the partitioner does the
+    placement.
 
     causal    — False for encoder-style (ViT) sections.
     act_hook  — activation hook installed (via ``common.act_hook``) inside
@@ -100,6 +158,8 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
                 hook active at trace time: sharding-constraint hooks are
                 illegal inside the manual shard_map region.  Hooks passed
                 here must be shard-local (dtype casts, debug taps, …).
+    vocab_parallel — "auto" (on iff ``padded_vocab % pp == 0``) | True |
+                False.  See module docstring for the math and exactness.
     mb_layout — external microbatch layout: ``(local_batch, t, msz) ->
                 microbatch`` tree slicer, so callers with a different data
                 layout than the shard-major default can thread it through.
@@ -117,6 +177,17 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
     n_moe = per_stage * sum(1 for _, ffn in pk if ffn == "moe")
     E = max(cfg.num_experts, 1)
 
+    if vocab_parallel == "auto":
+        vp = pp > 1 and cfg.padded_vocab % pp == 0
+    else:
+        vp = bool(vocab_parallel)
+        if vp and cfg.padded_vocab % pp:
+            raise ValueError(
+                f"vocab_parallel=True but padded_vocab="
+                f"{cfg.padded_vocab} does not divide pp={pp}")
+    Vs = cfg.padded_vocab // pp if vp else cfg.padded_vocab
+    tp_axis, tp_attn, tp_ffn = _tp_plan(cfg, mesh, st_ax)
+
     def stage_fwd(layers_local, x):
         """Local layer groups.  Returns (x, stats [n_moe, 2, E]) — per-MoE-
         sublayer router stats, kept separate so the nonlinear aux combine
@@ -129,7 +200,9 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
                 fn = functools.partial(tf._sublayer_fwd, cfg=cfg,
                                        mixer=mixer, ffn=ffn, causal=causal,
                                        segment_ids=None, impl=impl,
-                                       collect_stats=is_moe)
+                                       collect_stats=is_moe,
+                                       tp_axis=tp_axis, tp_attn=tp_attn,
+                                       tp_ffn=tp_ffn)
                 if remat:
                     fn = jax.checkpoint(fn)
                 if is_moe:
@@ -141,6 +214,31 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
             return x, jnp.stack(stats)
         return x, jnp.zeros((0, 2, E), jnp.float32)
 
+    def vp_embed(params, batch, off):
+        """Vocab-parallel embed lookup (tied tables): each stage holds a
+        [Vs, D] row slice; a token's row lives on exactly one stage and
+        every other stage contributes 0.0, so the psum is bitwise-exact."""
+        tok = batch["tokens"]
+        loc = jnp.clip(tok - off, 0, Vs - 1)
+        x = jnp.take(params["embed"], loc, axis=0)
+        mine = ((tok >= off) & (tok < off + Vs)).astype(x.dtype)
+        x = jax.lax.psum(x * mine[..., None], st_ax)
+        return tf.vision_scatter(params, cfg, x, batch)
+
+    def vp_logits(params, hj, off):
+        """Local-vocab-slice logits [msz, S, Vs], f32, pad-masked by the
+        *global* column index (exact lse of the unpadded model)."""
+        x = cm.grad_dtype_barrier(hj)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        logits = logits.astype(jnp.float32)
+        if cfg.vocab_pad:
+            valid = off + jnp.arange(Vs) < cfg.vocab_size
+            logits = jnp.where(valid, logits, -1e30)
+        return logits
+
     def pipeline_body(params, batch, *, d_axis):
         stage = jax.lax.axis_index(st_ax)
         layers_local = params["layers"]
@@ -148,11 +246,17 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
         Bl, S = tokens.shape
         assert Bl % n_micro == 0, (Bl, n_micro)
         msz = Bl // n_micro
+        off = stage * Vs if vp else 0
+        vp_embed_table = vp and cfg.tie_embeddings
 
         with cm.act_hook(act_hook):
-            embeds = [tf.embed_tokens(params, cfg,
-                                      mb_layout(batch, t, msz))
-                      for t in range(n_micro)]
+            if vp_embed_table:
+                embeds = [vp_embed(params, mb_layout(batch, t, msz), off)
+                          for t in range(n_micro)]
+            else:
+                embeds = [tf.embed_tokens(params, cfg,
+                                          mb_layout(batch, t, msz))
+                          for t in range(n_micro)]
             recv = jnp.zeros_like(embeds[0])
             stats_sum = jnp.zeros((n_moe, 2, E), jnp.float32)
             outs = []
@@ -169,27 +273,59 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
                 if perm:
                     recv = jax.lax.ppermute(h, st_ax, perm)
 
-            # last stage: final norm + unembed + CE sums per microbatch
+            # final norm + unembed + CE sums per microbatch.
+            # vp: the last stage's final hidden is psum-broadcast to every
+            # stage (bitwise: the other stages contribute zeros), each
+            # stage scores its vocab slice, and the slices combine via a
+            # distributed logsumexp + gold-logit psum — nll_sum comes out
+            # stage-replicated.  masked fallback: only the last stage's
+            # full-vocab result survives the is_last mask.
             nll_sum = jnp.zeros((), jnp.float32)
             mask_sum = jnp.zeros((), jnp.float32)
             for j in range(n_micro):
-                hj = tf.apply_norm(params["final_norm"], outs[pp - 1 + j],
-                                   cfg)
-                logits = tf.unembed(params, cfg, hj).astype(jnp.float32)
+                hj = outs[pp - 1 + j]
+                if vp:
+                    hj = jax.lax.psum(
+                        jnp.where(stage == pp - 1, hj, jnp.zeros_like(hj)),
+                        st_ax)
+                hj = tf.apply_norm(params["final_norm"], hj, cfg)
                 mb = mb_layout(batch, j, msz)
-                lse = jax.nn.logsumexp(logits, axis=-1)
-                gold = jnp.take_along_axis(
-                    logits, mb["labels"][..., None], axis=-1)[..., 0]
+                if vp:
+                    logits = vp_logits(params, hj, off)
+                    m_loc = jnp.max(logits, axis=-1)
+                    mx = jax.lax.pmax(jax.lax.stop_gradient(m_loc), st_ax)
+                    se = jnp.sum(jnp.exp(logits - mx[..., None]), axis=-1)
+                    lse = mx + jnp.log(jax.lax.psum(se, st_ax))
+                    lbl = mb["labels"]
+                    lloc = jnp.clip(lbl - off, 0, Vs - 1)
+                    g = jnp.take_along_axis(logits, lloc[..., None],
+                                            axis=-1)[..., 0]
+                    mine = ((lbl >= off) & (lbl < off + Vs)).astype(
+                        jnp.float32)
+                    gold = jax.lax.psum(g * mine, st_ax)
+                else:
+                    logits = tf.unembed(params, cfg, hj).astype(
+                        jnp.float32)
+                    lse = jax.nn.logsumexp(logits, axis=-1)
+                    gold = jnp.take_along_axis(
+                        logits, mb["labels"][..., None], axis=-1)[..., 0]
                 m = mb.get("loss_mask")
                 m = jnp.ones_like(lse) if m is None else m.astype(
                     jnp.float32)
                 nll_sum = nll_sum + jnp.sum((lse - gold) * m)
                 mask_sum = mask_sum + jnp.sum(m)
 
-        is_last = (stage == pp - 1).astype(jnp.float32)
-        axes = (st_ax,) + tuple(d_axis or ())
-        total_nll = jax.lax.psum(nll_sum * is_last, axes)
-        total_mask = jax.lax.psum(mask_sum * is_last, axes)
+        if vp:
+            # nll_sum is replicated across stages (built from psum/pmax
+            # results) — reduce over the data axes only
+            axes = tuple(d_axis or ())
+            total_nll = jax.lax.psum(nll_sum, axes) if axes else nll_sum
+            total_mask = jax.lax.psum(mask_sum, axes) if axes else mask_sum
+        else:
+            is_last = (stage == pp - 1).astype(jnp.float32)
+            axes = (st_ax,) + tuple(d_axis or ())
+            total_nll = jax.lax.psum(nll_sum * is_last, axes)
+            total_mask = jax.lax.psum(mask_sum * is_last, axes)
         aux_tot = jnp.float32(0.0)
         if n_moe:
             # average the *linear* router stats over microbatches and DP
@@ -205,9 +341,19 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
         return total_nll / jnp.maximum(total_mask, 1.0) \
             + aux_weight * aux_tot
 
+    layer_specs = _layer_specs(cfg, st_ax, tp_axis, tp_attn, tp_ffn)
+
     def loss_fn(params, batch):
-        p_specs = {k: (P(st_ax) if k == "layers" else P())
-                   for k in params}
+        p_specs = {}
+        for k in params:
+            if k == "layers":
+                p_specs[k] = layer_specs
+            elif vp and k == "embed" and cfg.tie_embeddings:
+                p_specs[k] = P(st_ax, None)
+            elif vp and k == "unembed":
+                p_specs[k] = P(None, st_ax)
+            else:
+                p_specs[k] = P()
         shard_b = d_ax is not None and \
             batch["tokens"].shape[0] % (dp * n_micro) == 0
         b_specs = {k: (P(d_ax) if shard_b else P()) for k in batch}
@@ -218,5 +364,7 @@ def build_pp_loss(cfg: ArchConfig, mesh, n_micro: int = 1, *,
 
     info = {"stage_axis": st_ax, "data_axis": d_ax, "stages": pp,
             "groups_per_stage": per_stage, "n_micro": n_micro,
-            "moe_layers_per_stage": n_moe}
+            "moe_layers_per_stage": n_moe, "vocab_parallel": vp,
+            "vocab_shard": Vs, "tp_axis": tp_axis, "tp_attn": tp_attn,
+            "tp_ffn": tp_ffn}
     return loss_fn, info

@@ -110,12 +110,19 @@ def rules_for(cfg: ArchConfig, mesh, *, teacher: bool = False) -> dict:
     On a mesh with a non-trivial ``pipe`` axis the stacked ``layers`` dim
     is mapped onto it: parameters and optimizer state live stage-
     partitioned at rest, matching the ``in_specs`` of
-    ``repro.dist.pipeline.build_pp_loss``."""
+    ``repro.dist.pipeline.build_pp_loss``.  When the padded vocab divides
+    the pipe axis — the same gate ``build_pp_loss`` uses for its
+    vocab-parallel cross-entropy — the ``vocab`` param dim is mapped onto
+    ``pipe`` too, so the embed/unembed tables rest exactly where the
+    staged loss consumes them (vocab slice per stage)."""
     rules = dict(DEFAULT_RULES)
     if teacher:
         del rules["embed"]
-    if dict(mesh.shape).get(AXIS_PIPE, 1) > 1:
+    pp = dict(mesh.shape).get(AXIS_PIPE, 1)
+    if pp > 1:
         rules["layers"] = (AXIS_PIPE,)
+        if cfg.padded_vocab % pp == 0:
+            rules["vocab"] = (AXIS_PIPE,) + DEFAULT_RULES["vocab"]
     return rules
 
 

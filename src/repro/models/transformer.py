@@ -118,16 +118,30 @@ def lm_specs(cfg: ArchConfig) -> dict:
 # --------------------------------------------------------------------------- #
 def _sublayer_fwd(lp, x, cfg: ArchConfig, mixer: str, ffn: Optional[str],
                   *, causal: bool, segment_ids, impl: str,
-                  collect_stats: bool = False):
+                  collect_stats: bool = False,
+                  tp_axis: Optional[str] = None, tp_attn: bool = False,
+                  tp_ffn: bool = False):
     """One (mixer, ffn) sub-layer.  Returns (x, aux); with
     ``collect_stats`` (MoE sub-layers only) returns (x, aux, stats) where
     stats are the [2, E] router statistics of :func:`repro.models.moe.moe`
     — the linear quantities PP microbatch accumulation needs for an exact
-    aux term."""
+    aux term.
+
+    tp_axis/tp_attn/tp_ffn — Megatron-style manual tensor parallelism for
+    callers inside a shard_map (``repro.dist.pipeline``): the caller's
+    in_specs slice ``heads``/``kv_heads`` (tp_attn) and the FFN ``mlp``
+    dim (tp_ffn) over ``tp_axis``, so each shard computes a head/f-slice
+    and the output contractions are *partial* sums — psummed here, after
+    the mixer and after the FFN.  Everything between the two psums is
+    elementwise per slice, so numerics match the unsharded layer exactly
+    (the GELU output bias, added after the f-contraction, is pre-scaled by
+    1/tp so the psum reconstructs it once)."""
     h = apply_norm(lp["norm1"], x, cfg)
     if mixer == "attn":
         h = att.attention(lp["attn"], h, cfg, causal=causal,
                           segment_ids=segment_ids, impl=impl)
+        if tp_attn and tp_axis is not None:
+            h = jax.lax.psum(h, tp_axis)
     else:
         h = mb.mamba(lp["mamba"], h, cfg, impl=impl)
     x = x + h
@@ -136,11 +150,20 @@ def _sublayer_fwd(lp, x, cfg: ArchConfig, mixer: str, ffn: Optional[str],
     if ffn is not None:
         h = apply_norm(lp["norm2"], x, cfg)
         if ffn == "mlp":
-            h = mlpm.mlp(lp[ffn], h, cfg)
+            fp = lp[ffn]
+            if tp_ffn and tp_axis is not None and cfg.mlp_act == "gelu":
+                tp = jax.lax.psum(1, tp_axis)   # static axis size
+                fp = dict(fp, b_out=fp["b_out"] / tp)
+            h = mlpm.mlp(fp, h, cfg)
         elif collect_stats:
             h, aux, stats = moem.moe(lp[ffn], h, cfg, return_stats=True)
         else:
             h, aux = moem.moe(lp[ffn], h, cfg)
+        if tp_ffn and tp_axis is not None:
+            # dense MLP f-slice / per-expert f-slice → partial output.
+            # MoE router stats/aux come from the replicated router and are
+            # already identical on every tp shard — only h is partial.
+            h = jax.lax.psum(h, tp_axis)
         x = x + h
     if collect_stats:
         assert ffn == "moe", "collect_stats only applies to MoE sub-layers"
@@ -148,22 +171,31 @@ def _sublayer_fwd(lp, x, cfg: ArchConfig, mixer: str, ffn: Optional[str],
     return x, aux
 
 
+def vision_scatter(p, cfg: ArchConfig, x: jnp.ndarray,
+                   batch: dict) -> jnp.ndarray:
+    """Scatter projected patch embeddings into the token stream (VLM archs).
+    Separated from the vocab lookup so vocab-parallel callers can run it
+    once on the combined (post-psum) embedding."""
+    if not (cfg.vision_dim and "image_embeds" in batch):
+        return x
+    vh = jnp.einsum("bkv,vd->bkd",
+                    batch["image_embeds"].astype(x.dtype),
+                    p["vision_proj"])
+    valid = batch["image_valid"].astype(x.dtype)[..., None]   # [B,K,1]
+    B = x.shape[0]
+    b_ix = jnp.broadcast_to(jnp.arange(B)[:, None],
+                            batch["image_pos"].shape)
+    upd = vh * valid
+    # replace token embedding at image positions (invalid slots add 0 at
+    # position 0 after being zeroed and re-added — use where-style update)
+    cur = x[b_ix, batch["image_pos"]]
+    x = x.at[b_ix, batch["image_pos"]].add(upd - cur * valid)
+    return x
+
+
 def embed_tokens(p, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
     x = jnp.take(p["embed"], batch["tokens"], axis=0)
-    if cfg.vision_dim and "image_embeds" in batch:
-        vh = jnp.einsum("bkv,vd->bkd",
-                        batch["image_embeds"].astype(x.dtype),
-                        p["vision_proj"])
-        valid = batch["image_valid"].astype(x.dtype)[..., None]   # [B,K,1]
-        B = x.shape[0]
-        b_ix = jnp.broadcast_to(jnp.arange(B)[:, None],
-                                batch["image_pos"].shape)
-        upd = vh * valid
-        # replace token embedding at image positions (invalid slots add 0 at
-        # position 0 after being zeroed and re-added — use where-style update)
-        cur = x[b_ix, batch["image_pos"]]
-        x = x.at[b_ix, batch["image_pos"]].add(upd - cur * valid)
-    return x
+    return vision_scatter(p, cfg, x, batch)
 
 
 def lm_forward(p, cfg: ArchConfig, batch: dict, *, causal: bool = True,

@@ -12,6 +12,38 @@ import jax
 import jax.numpy as jnp
 
 
+class DonatedStateError(RuntimeError):
+    """A params/optimizer-state tree holds deleted (donated) buffers.
+
+    The step jits donate their optimizer-state argument, and
+    ``jax.device_put`` is a no-copy identity when the target sharding
+    already matches — so "fresh" state derived from a tree a previous
+    step donated can silently alias the dead buffers and crash deep
+    inside the next compiled call.
+    """
+
+
+def check_live(tree, what: str = "optimizer state") -> None:
+    """Raise :class:`DonatedStateError` if any leaf of ``tree`` was
+    deleted by a donating jit.  A no-op under tracing (tracers carry no
+    buffers), so it is safe to call from inside jitted update fns."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        deleted = getattr(leaf, "is_deleted", None)
+        if not callable(deleted):
+            continue
+        try:
+            dead = deleted()
+        except Exception:      # tracer / array-like without real buffers
+            continue
+        if dead:
+            raise DonatedStateError(
+                f"{what} contains deleted (donated) buffers — this tree "
+                "was consumed by a previous donating update step. "
+                "Re-`place` fresh state (CompoundRuntime.place / "
+                "jax.device_put of a host copy) instead of re-using a "
+                "tree that has already been donated.")
+
+
 class AdamWState(NamedTuple):
     step: jnp.ndarray            # scalar int32
     mu: Any                      # fp32 tree
@@ -62,6 +94,7 @@ def update(grads, state: AdamWState, lr: jnp.ndarray,
     Passing it with clipping disabled raises: the caller clearly expects
     the joint norm to drive the update, and it would be silently ignored.
     """
+    check_live(state, "optimizer state")
     if gnorm is not None and cfg.clip_norm <= 0:
         raise ValueError(
             f"adamw.update: gnorm= was passed but clipping is disabled "

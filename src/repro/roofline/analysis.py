@@ -368,6 +368,133 @@ def analyze_hlo(text: str) -> HloStats:
 
 
 # --------------------------------------------------------------------------- #
+# Targeted extraction: per-op-shape dot FLOPs and ring-model collective
+# wire bytes.  These back the step-roofline assertions (vocab-parallel
+# CE no longer paying pp× unembed FLOPs; compressed DP grad all-reduce
+# halving/quartering wire bytes) — see benchmarks/bench_step_roofline.py.
+# --------------------------------------------------------------------------- #
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=\[")
+
+
+def _group_size(ins: Instr) -> int:
+    """Participant count of a collective from its replica_groups attr.
+    Handles both the explicit ``{{0,1},{2,3}}`` and the iota
+    ``[4,2]<=[8]`` (4 groups of 2) forms; 1 when absent/unparseable."""
+    m = _GROUPS_IOTA_RE.search(ins.rest)
+    if m:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        return dims[-1] if dims else 1
+    m = _GROUPS_SET_RE.search(ins.rest)
+    if m:
+        first = m.group(1).split("}")[0]
+        return len([t for t in first.strip("{}").split(",") if t.strip()])
+    return 1
+
+
+def _first_dtype(type_str: str) -> str:
+    m = _SHAPE_RE.search(type_str)
+    return m.group(1) if m else "?"
+
+
+@dataclass
+class CollectiveOp:
+    """One collective instruction with its ring-model wire cost."""
+    family: str
+    dtype: str
+    group_size: int
+    payload_bytes: float        # per-device buffer the op moves
+    wire_bytes: float           # ring model: bytes on the wire per device
+    count: float                # execution multiplier
+
+
+def _ring_wire(family: str, n: int, operand_bytes: float,
+               result_bytes: float) -> float:
+    """Per-device wire bytes of one collective on an n-way ring.
+
+    all-reduce moves 2(n-1)/n of the payload (reduce-scatter +
+    all-gather phases); all-gather / reduce-scatter / all-to-all move
+    (n-1)/n of the *full* buffer (result for all-gather, operand
+    otherwise); collective-permute ships its payload once."""
+    if n <= 1:
+        return 0.0
+    if family == "all-reduce":
+        return 2.0 * (n - 1) / n * operand_bytes
+    if family == "all-gather":
+        return (n - 1) / n * result_bytes
+    if family in ("reduce-scatter", "all-to-all"):
+        return (n - 1) / n * max(operand_bytes, result_bytes)
+    return float(operand_bytes)     # collective-permute
+
+
+def collective_ops(text: str) -> List[CollectiveOp]:
+    """All executed collectives with replica-group-aware ring wire
+    bytes, multiplier-scaled (while bodies × trips)."""
+    comps = parse_hlo(text)
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else next(iter(comps))
+    mf, _ = _multipliers(comps, entry)
+    out: List[CollectiveOp] = []
+    for name, comp in comps.items():
+        kf = mf.get(name, 0.0)
+        if kf == 0.0:
+            continue
+        for ins in comp.instrs:
+            base = (ins.opcode[:-6] if ins.opcode.endswith("-start")
+                    else ins.opcode)
+            if base not in _COLLECTIVES:
+                continue
+            operand_bytes = 0
+            for on in _operand_names(ins.rest):
+                o = comp.table.get(on)
+                if o is not None and o.opcode != "constant":
+                    operand_bytes += o.bytes
+            n = _group_size(ins)
+            payload = float(max(operand_bytes, ins.bytes))
+            out.append(CollectiveOp(
+                base, _first_dtype(ins.type_str), n, payload,
+                kf * _ring_wire(base, n, float(operand_bytes),
+                                float(ins.bytes)),
+                kf))
+    return out
+
+
+def wire_bytes_by_dtype(text: str) -> Dict[str, float]:
+    """Ring-model collective wire bytes per element dtype — the knob the
+    compressed DP all-reduce turns (f32 → u16-bitcast bf16 → s8)."""
+    out: Dict[str, float] = {}
+    for op in collective_ops(text):
+        out[op.dtype] = out.get(op.dtype, 0.0) + op.wire_bytes
+    return out
+
+
+def total_wire_bytes(text: str) -> float:
+    return sum(wire_bytes_by_dtype(text).values())
+
+
+def dot_flops_matching(text: str, out_last_dim: int) -> float:
+    """Multiplier-scaled FLOPs of every ``dot`` whose OUTPUT last dim is
+    ``out_last_dim`` — post-SPMD shapes are per-device, so matching on
+    the local vocab-shard width isolates the unembed projection."""
+    comps = parse_hlo(text)
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else next(iter(comps))
+    mf, _ = _multipliers(comps, entry)
+    total = 0.0
+    for name, comp in comps.items():
+        kf = mf.get(name, 0.0)
+        if kf == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode != "dot":
+                continue
+            dims = _first_shape_dims(ins.type_str)
+            if dims and dims[-1] == out_last_dim:
+                total += kf * _dot_flops(ins, comp.table)
+    return total
+
+
+# --------------------------------------------------------------------------- #
 def roofline_terms(stats: HloStats, *, hw=None) -> Dict[str, float]:
     """Three roofline terms in seconds (per chip; HLO is post-SPMD)."""
     from repro.core.types import V5E

@@ -24,6 +24,14 @@ Dispatch rules (``parallel_regime``) — how a section's
 * ``ParallelConfig.pp``/``.cp`` must match the mesh's ``pipe``/``seq``
   sizes, and pp×cp is unsupported — both raise instead of silently
   training with the pipe/seq devices replicated (the pre-PR-2 bug).
+* ``ParallelConfig.grad_compress`` ∈ {"none", "bf16", "int8"} compresses
+  the DP gradient all-reduce (``repro.optim.compression``): the loss +
+  grad computation moves into a shard_map over the data axis, each shard
+  accumulates its local microbatch gradients uncompressed in fp32, and
+  ONE compressed all-reduce per step replaces the fp32 one (int8 carries
+  an error-feedback residual across steps — the step gains a trailing
+  ``ef`` argument/result, stacked ``[dp, ...]`` and donated).  Plain
+  regime with a single data axis only; pp/cp/tp meshes raise.
 """
 from __future__ import annotations
 
@@ -177,6 +185,32 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
     cfg = model.cfg
     regime = parallel_regime(mesh, parallel)
     _check_pp_cp_support(cfg, regime)
+    compress = parallel.grad_compress or "none"
+    if compress != "none":
+        from repro.optim import compression as gcomp
+        if compress not in gcomp.METHODS:
+            raise ValueError(
+                f"ParallelConfig.grad_compress={compress!r}: expected one "
+                f"of {gcomp.METHODS}")
+        sizes = dict(mesh.shape)
+        if regime != "plain" or any(
+                sizes.get(a, 1) > 1 for a in (shd.AXIS_PIPE, shd.AXIS_SEQ,
+                                              shd.AXIS_MODEL)):
+            raise NotImplementedError(
+                "grad_compress requires the plain regime on a dp-only "
+                "mesh: the compressed all-reduce runs in a shard_map over "
+                "the data axis and cannot nest inside pp/cp schedules or "
+                "compose with tp activation sharding")
+        if len(shd.dp_axes(mesh)) > 1:
+            raise NotImplementedError(
+                "grad_compress supports a single data axis (got a multi-"
+                "pod dp mesh); compress per pod or disable")
+        _dp = shd.axis_size(mesh, shd.dp_axes(mesh))
+        if shape.global_batch % max(_dp, 1):
+            raise NotImplementedError(
+                f"grad_compress needs the global batch "
+                f"({shape.global_batch}) to divide the data axis ({_dp}) "
+                "so every shard owns a real slice of the batch")
     if regime == "pp" and parallel.sequence_parallel:
         raise NotImplementedError(
             "sequence_parallel is a GSPMD activation-layout knob and "
@@ -263,6 +297,89 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
             out_metrics = {"loss": loss.astype(jnp.float32),
                            "grad_norm": gnorm, "lr": lr}
             return new_params, new_opt, out_metrics
+
+    if compress != "none":
+        da = (shd.dp_axes(mesh) or (shd.AXIS_DATA,))[0]
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: model.loss(p, mb), has_aux=True)
+
+        def sharded_loss_grad(params, batch_local, ef_local):
+            """Runs on one data shard: local microbatch grad accumulation
+            (fp32, uncompressed), then the single compressed mean-reduce
+            across the data axis.  ``ef_local`` is the shard's [1, ...]
+            slice of the stacked error-feedback residual."""
+            with cm.act_hook(None):
+                if n_micro == 1:
+                    (loss, _), g = grad_fn(params, batch_local)
+                    g = jax.tree_util.tree_map(
+                        lambda x: x.astype(jnp.float32), g)
+                else:
+                    local = jax.tree_util.tree_map(
+                        lambda x: x.reshape(
+                            (n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                        batch_local)
+
+                    def micro(carry, mb):
+                        g_acc, l_acc = carry
+                        (l, _), g = grad_fn(params, mb)
+                        g_acc = jax.tree_util.tree_map(
+                            lambda a, b: a + b.astype(jnp.float32),
+                            g_acc, g)
+                        return (g_acc, l_acc + l), None
+
+                    g0 = jax.tree_util.tree_map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                    (g_sum, l_sum), _ = jax.lax.scan(
+                        micro, (g0, jnp.float32(0)), local)
+                    g = jax.tree_util.tree_map(lambda x: x / n_micro,
+                                               g_sum)
+                    loss = l_sum / n_micro
+            mean_loss = jax.lax.psum(loss, da) / dp_total
+            ef = gcomp.ErrorFeedback(jax.tree_util.tree_map(
+                lambda x: x[0], ef_local))
+            red, new_ef = gcomp.ef_compress_tree(g, ef, da, compress)
+            red = jax.tree_util.tree_map(
+                lambda r, p: r.astype(p.dtype), red, params)
+            new_ef_stacked = jax.tree_util.tree_map(
+                lambda x: x[None], new_ef.residual)
+            return mean_loss, red, new_ef_stacked
+
+        run = shd.shard_map(
+            sharded_loss_grad, mesh,
+            (P(), jax.tree_util.tree_map(lambda _: P(da), b_shard),
+             P(da)),
+            (P(), P(), P(da)))
+
+        def train_step(params, opt_state, batch, step_idx, ef):  # noqa: F811
+            loss, grads, new_ef = run(params, batch, ef)
+            lr = lr_fn(step_idx)
+            new_params, new_opt, gnorm = adamw.update(grads, opt_state,
+                                                      lr, opt_cfg)
+            return (new_params, new_opt,
+                    {"loss": loss.astype(jnp.float32),
+                     "grad_norm": gnorm, "lr": lr}, new_ef)
+
+        ef_shard = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(da)), dict(p_shard))
+        step = jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, b_shard, rep, ef_shard),
+            out_shardings=(p_shard, o_shard,
+                           {"loss": rep, "grad_norm": rep, "lr": rep},
+                           ef_shard),
+            donate_argnums=(0, 1, 4))
+
+        def ef_init(params):
+            """Zero-initialized stacked [dp, ...] error-feedback residual,
+            placed on the data axis."""
+            z = jax.tree_util.tree_map(
+                lambda p: jnp.zeros((dp_total,) + p.shape, jnp.float32),
+                params)
+            return jax.device_put(z, ef_shard)
+
+        shardings = {"params": p_shard, "opt": o_shard, "batch": b_shard,
+                     "ef": ef_shard, "ef_init": ef_init}
+        return step, shardings
 
     step = jax.jit(
         train_step,

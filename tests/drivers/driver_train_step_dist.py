@@ -143,6 +143,55 @@ gerr = tree_max_diff(g_pp, g_ref)
 print(f"moe pp grad err={gerr:.2e}")
 assert gerr < 5e-4, gerr
 
+# ---- HLO proof: vocab-parallel CE FLOPs, TP-in-stage sharding ------------
+# post-SPMD shapes are per-device, so matching the local vocab-shard /
+# FFN-shard width isolates exactly the dots the optimizations target
+from repro.roofline import analysis as ra
+
+# dims chosen so V (512), V/pp (128) and d_ff (no collision) identify dots
+hcfg = get_reduced("qwen1.5-0.5b").replace(
+    dtype="float32", num_layers=4, vocab_size=512, d_model=64,
+    num_heads=4, num_kv_heads=4, head_dim=16, d_ff=160,
+    tie_embeddings=False)
+
+
+def pp_grad_hlo(mesh, vocab_parallel):
+    loss_fn, _ = build_pp_loss(hcfg, mesh, n_micro=2, impl="ref",
+                               vocab_parallel=vocab_parallel)
+    hp = init_params(tf.lm_specs(hcfg), jax.random.PRNGKey(0))
+    hb = make_batch(hcfg, seed=2)
+    with mesh:
+        return jax.jit(jax.value_and_grad(
+            lambda p: loss_fn(p, hb))).lower(hp).compile().as_text()
+
+
+hmesh = jax.make_mesh((2, 4), ("data", "pipe"))
+masked_hlo = pp_grad_hlo(hmesh, vocab_parallel=False)
+vp_hlo = pp_grad_hlo(hmesh, vocab_parallel=True)
+full = ra.dot_flops_matching(masked_hlo, hcfg.padded_vocab)
+shard = ra.dot_flops_matching(vp_hlo, hcfg.padded_vocab // 4)
+assert full > 0 and shard > 0, (full, shard)
+assert ra.dot_flops_matching(vp_hlo, hcfg.padded_vocab) == 0, \
+    "vocab-parallel CE must not materialize full-vocab logits"
+vr = full / shard
+print(f"vp-CE unembed dot FLOPs: masked {full:.3g} vp {shard:.3g} "
+      f"ratio {vr:.2f} (pp=4)")
+assert 0.9 * 4 <= vr <= 1.1 * 4, vr
+
+tmesh1 = jax.make_mesh((2, 2, 1), ("data", "pipe", "model"))
+tmesh2 = jax.make_mesh((1, 2, 2), ("data", "pipe", "model"))
+t1 = pp_grad_hlo(tmesh1, vocab_parallel=True)
+t2 = pp_grad_hlo(tmesh2, vocab_parallel=True)
+ffn1 = ra.dot_flops_matching(t1, hcfg.d_ff) / (GB // 2)     # dp=2
+ffn2 = ra.dot_flops_matching(t2, hcfg.d_ff // 2) / GB       # dp=1
+assert ffn1 > 0 and ffn2 > 0, (ffn1, ffn2)
+assert ra.dot_flops_matching(t2, hcfg.d_ff) == 0, \
+    "tp=2 stage bodies must not compute full-width FFN dots"
+tr = ffn1 / ffn2
+print(f"TP-in-stage FFN dot FLOPs/sample: tp1 {ffn1:.3g} tp2 {ffn2:.3g} "
+      f"ratio {tr:.2f} (tp=2)")
+assert 0.9 * 2 <= tr <= 1.1 * 2, tr
+
 # ---- multi-pod PP: the pod axis must carry data parallelism --------------
 mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "pipe"))
 loss3, info3 = build_pp_loss(cfg, mesh3, n_micro=2, impl="ref")

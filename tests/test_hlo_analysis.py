@@ -5,7 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.roofline.analysis import analyze_hlo, parse_hlo, roofline_terms
+from repro.roofline.analysis import (analyze_hlo, collective_ops,
+                                     dot_flops_matching, parse_hlo,
+                                     roofline_terms, total_wire_bytes,
+                                     wire_bytes_by_dtype, _ring_wire)
 
 
 def _compile_text(f, *args):
@@ -70,6 +73,78 @@ def test_parse_computations():
     assert len(comps) >= 1
     assert any(i.opcode in ("fusion", "multiply", "reduce")
                for c in comps.values() for i in c.instrs)
+
+
+# hand-written but grammar-exact post-SPMD HLO: one set-form all-reduce
+# (2 groups of 4) and one iota-form all-gather (1 group of 8)
+_SYNTH_COLLECTIVE_HLO = """\
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024], p1: u16[128]) -> (f32[1024], u16[1024]) {
+  %p0 = f32[1024]{0} parameter(0)
+  %p1 = u16[128]{0} parameter(1)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = u16[1024]{0} all-gather(%p1), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %t = (f32[1024]{0}, u16[1024]{0}) tuple(%ar, %ag)
+}
+"""
+
+
+def test_collective_group_size_both_formats():
+    ops = {op.family: op for op in collective_ops(_SYNTH_COLLECTIVE_HLO)}
+    assert ops["all-reduce"].group_size == 4      # {{0,1,2,3},{4,5,6,7}}
+    assert ops["all-gather"].group_size == 8      # [1,8]<=[8]
+    assert ops["all-reduce"].dtype == "f32"
+    assert ops["all-gather"].dtype == "u16"
+
+
+def test_ring_wire_model():
+    # all-reduce: reduce-scatter + all-gather phases, 2(n-1)/n × payload
+    assert _ring_wire("all-reduce", 4, 4096, 4096) == \
+        pytest.approx(2 * 3 / 4 * 4096)
+    # all-gather ships the full RESULT minus the local shard
+    assert _ring_wire("all-gather", 8, 256, 2048) == \
+        pytest.approx(7 / 8 * 2048)
+    assert _ring_wire("all-to-all", 8, 2048, 2048) == \
+        pytest.approx(7 / 8 * 2048)
+    assert _ring_wire("collective-permute", 8, 2048, 2048) == 2048
+    # degenerate single-participant groups move nothing
+    assert _ring_wire("all-reduce", 1, 4096, 4096) == 0.0
+
+
+def test_wire_bytes_by_dtype_synthetic():
+    w = wire_bytes_by_dtype(_SYNTH_COLLECTIVE_HLO)
+    assert w["f32"] == pytest.approx(2 * 3 / 4 * 1024 * 4)
+    assert w["u16"] == pytest.approx(7 / 8 * 1024 * 2)
+    assert total_wire_bytes(_SYNTH_COLLECTIVE_HLO) == \
+        pytest.approx(w["f32"] + w["u16"])
+
+
+def test_dot_flops_matching_selects_by_output_width():
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    text = _compile_text(lambda a, b: a @ b, a, b)
+    assert dot_flops_matching(text, 32) == pytest.approx(2 * 8 * 16 * 32)
+    assert dot_flops_matching(text, 31) == 0.0
+
+
+def test_dot_flops_matching_scales_with_while_trips():
+    n, L = 8, 3
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=L)
+        return y
+
+    text = _compile_text(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+    assert dot_flops_matching(text, n) == pytest.approx(L * 2 * n ** 3)
 
 
 def test_roofline_terms_structure():

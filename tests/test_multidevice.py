@@ -41,3 +41,7 @@ def test_pipeline_and_context_parallelism():
 
 def test_elastic_restore_and_tiny_dryrun():
     _run("driver_elastic_dryrun.py")
+
+
+def test_gradient_compression_8way():
+    _run("driver_compression.py")
