@@ -10,7 +10,7 @@ from __future__ import annotations
 import time
 
 from repro.core.scheduler import schedule_global_batch, wavefront_schedule
-from repro.core.simulator import Sample, simulate, simulate_fanout
+from repro.core.simulator import Sample, simulate_fanout
 
 
 def _mk_samples(n, vision_ratio, vit_f, vit_b, seed=0):

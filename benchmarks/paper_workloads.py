@@ -16,14 +16,13 @@ not assumed).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
 
 from repro.core import cost_model as cmdl
 from repro.core.graph import build_distill_graph, build_vlm_graph
 from repro.core.planner import Plan, plan, _iter_time
 from repro.core.scheduler import schedule_global_batch
 from repro.core.simulator import Sample, simulate_fanout
-from repro.core.types import ArchConfig, ParallelConfig, SectionConfig
+from repro.core.types import ArchConfig, ParallelConfig
 from repro.models.vlm import vit_config
 
 

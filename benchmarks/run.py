@@ -14,8 +14,12 @@ to ``BENCH_vlm_realized.json`` at the repo root, where it is committed
 so the realized-performance trajectory is tracked in-tree.
 ``--step-roofline`` runs the HLO-derived distributed-step scoreboard
 (vocab-parallel CE FLOPs, TP-in-stage FLOPs, compressed DP all-reduce
-wire bytes — each asserted, see bench_step_roofline.py) and writes
-``BENCH_step_roofline.json`` at the repo root.
+wire bytes — each asserted via the declarative gate files, see
+bench_step_roofline.py) and writes ``BENCH_step_roofline.json`` at the
+repo root.
+``--lint`` runs the static-analysis suite (``python -m repro.analysis``):
+deadlock/donation passes over every registered workload spec plus a
+schema check of the committed HLO gate files.
 """
 from __future__ import annotations
 
@@ -87,6 +91,15 @@ def step_roofline() -> None:
           flush=True)
 
 
+def lint() -> None:
+    """Run the static-analysis suite in its own interpreter (same entry
+    point as ``python -m repro.analysis``)."""
+    env = dict(os.environ, PYTHONPATH=str(_ROOT / "src"))
+    proc = subprocess.run([sys.executable, "-m", "repro.analysis"],
+                          env=env, timeout=900)
+    sys.exit(proc.returncode)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -99,8 +112,15 @@ def main() -> None:
                     help="run the HLO-derived distributed-step scoreboard "
                          "(subprocess, 8 virtual devices) and write "
                          "BENCH_step_roofline.json at the repo root")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the static-analysis suite (deadlock/"
+                         "donation passes over registered workload specs "
+                         "+ HLO gate schema checks)")
     args = ap.parse_args()
 
+    if args.lint:
+        lint()
+        return
     if args.vlm_realized:
         vlm_realized(args.smoke)
         return

@@ -1,0 +1,37 @@
+"""Static-analysis suite for the compound runtime.
+
+Machine-checks the invariants the runtime's correctness rests on, which
+used to live as prose CAUTIONs and scattered inline asserts:
+
+* ``deadlock`` — the dispatch graph a :class:`WorkloadSpec` compiles to
+  (blocking pulls + per-section worker FIFOs, incl. the grad-norm
+  rendezvous and lookahead cross-iteration coupling) is acyclic;
+* ``donation`` — no state tree enters two donating trajectories
+  (reuse of donated trees, cross-section aliasing, params/master
+  aliasing) — caught at ``install()`` instead of deep inside a jit;
+* ``affinity`` — one launching thread per section mesh (disjoint carved
+  meshes + one live worker statically; a dispatch trace dynamically);
+* ``hlo`` — declarative sharding/efficiency gates over compiled
+  post-SPMD HLO (gate files under ``repro/analysis/gates/``).
+
+``python -m repro.analysis`` runs the build-time passes over every
+registered workload spec and schema-checks the committed gate files;
+``benchmarks/run.py --lint`` is the same entry point.  See
+``docs/analysis.md`` for the pass catalog and severity model.
+"""
+from repro.analysis.core import (AnalysisReport, Finding, PASSES, Severity,
+                                 register)
+from repro.analysis.affinity import check_trace, check_wiring, tracking
+from repro.analysis.deadlock import check_events, check_spec, model_events
+from repro.analysis.donation import lint_spec, lint_state, lint_step_fn
+from repro.analysis.hlo_gates import (evaluate, evaluate_file, list_gates,
+                                      load_gate, validate_gate)
+
+__all__ = [
+    "AnalysisReport", "Finding", "PASSES", "Severity", "register",
+    "check_trace", "check_wiring", "tracking",
+    "check_events", "check_spec", "model_events",
+    "lint_spec", "lint_state", "lint_step_fn",
+    "evaluate", "evaluate_file", "list_gates", "load_gate",
+    "validate_gate",
+]

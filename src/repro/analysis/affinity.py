@@ -1,0 +1,165 @@
+"""Mesh-thread affinity checker (analysis pass ``affinity``).
+
+XLA CPU deadlocks when two host threads interleave collective launches
+on one device set — the rule the whole disaggregated runtime is built
+around is therefore *one launching thread per section mesh*.  This pass
+turns that prose CAUTION into a machine check, from two directions:
+
+* **static wiring** (:func:`check_wiring`) — from a runtime's carved
+  meshes and workers: every section has exactly one worker thread
+  (named ``section-<name>``, alive), and no two section meshes share a
+  device — overlapping device sets are exactly the configuration where
+  two workers can interleave collective launches on one device set;
+* **dispatch trace** (:func:`tracking` / :func:`check_trace`) — a cheap
+  record, taken inside the executor's task wrapper, of which thread
+  executed each section's dispatches; the check proves every dispatch
+  of a section ran on that section's own worker thread (the
+  ``SectionWorker`` run loop marks its thread, so main-thread or
+  cross-worker execution is attributed precisely).
+
+``MaestroRuntime`` wiring always satisfies the static check by
+construction (``carve_sections`` slices disjoint device ranges); the
+value is rejecting *hand-wired* runtimes and regressions loudly at
+build time, and proving the dynamic property on real executions in
+tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import AnalysisReport, Severity, register
+
+# ---------------------------------------------------------------------------
+# dispatch-trace mode: enabled by the `tracking()` context manager; the
+# executor's task wrapper calls `record()` per executed dispatch (a
+# no-op when tracing is off — one truthiness check on the hot path).
+# ---------------------------------------------------------------------------
+_trace_lock = threading.Lock()
+_trace: Optional[List[Tuple[str, str, Optional[str]]]] = None
+
+#: thread-local marker set by SectionWorker._run: which section's worker
+#: this thread is (None on the main thread / foreign threads)
+worker_section = threading.local()
+
+
+def record(section: str) -> None:
+    """Record one executed dispatch: (section, thread name, owning
+    worker section).  Called by the executor wrapper; no-op unless
+    :func:`tracking` is active."""
+    if _trace is None:
+        return
+    t = threading.current_thread()
+    owner = getattr(worker_section, "name", None)
+    with _trace_lock:
+        if _trace is not None:
+            _trace.append((section, t.name, owner))
+
+
+@contextlib.contextmanager
+def tracking():
+    """Enable the dispatch trace; yields the live trace list."""
+    global _trace
+    with _trace_lock:
+        prev, _trace = _trace, []
+        trace = _trace
+    try:
+        yield trace
+    finally:
+        with _trace_lock:
+            _trace = prev
+
+
+def check_trace(trace: List[Tuple[str, str, Optional[str]]]
+                ) -> AnalysisReport:
+    """Verify every recorded dispatch of a section ran on that section's
+    own worker thread — the dynamic half of the one-thread-per-mesh
+    rule."""
+    rep = AnalysisReport("affinity")
+    by_section: Dict[str, Set[Tuple[str, Optional[str]]]] = {}
+    for section, thread, owner in trace:
+        by_section.setdefault(section, set()).add((thread, owner))
+    for section, launchers in sorted(by_section.items()):
+        bad = [(t, o) for t, o in launchers if o != section]
+        if bad:
+            who = ", ".join(
+                f"thread {t!r}" + (f" (worker of {o!r})" if o else
+                                   " (not a section worker)")
+                for t, o in sorted(bad))
+            rep.add(Severity.ERROR, "affinity.foreign-thread", section,
+                    f"dispatches of section {section!r} executed on "
+                    f"{who} — every collective-bearing program of a "
+                    "section mesh must launch from that section's one "
+                    "SectionWorker (XLA CPU rendezvous contract)")
+        if len(launchers) > 1:
+            rep.add(Severity.ERROR, "affinity.multiple-threads", section,
+                    f"dispatches of section {section!r} executed on "
+                    f"{len(launchers)} distinct threads "
+                    f"({sorted(t for t, _ in launchers)})")
+        if not bad and len(launchers) == 1:
+            rep.add(Severity.INFO, "affinity.trace", section,
+                    f"{sum(1 for s, _, _ in trace if s == section)} "
+                    f"dispatches, all on {next(iter(launchers))[0]!r}")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# static wiring check
+# ---------------------------------------------------------------------------
+def _device_ids(mesh) -> Set:
+    devs = getattr(mesh, "devices", None)
+    if devs is None:
+        return set()
+    try:
+        flat = devs.flatten().tolist()
+    except AttributeError:
+        flat = list(devs)
+    return {getattr(d, "id", d) for d in flat}
+
+
+@register("affinity")
+def check_wiring(runtime) -> AnalysisReport:
+    """Static affinity check over a runtime's wiring: disjoint section
+    meshes, one live worker per section.  ``runtime`` needs ``meshes``
+    (section -> mesh with ``.devices``) and ``workers`` (section ->
+    SectionWorker-like); both ``MaestroRuntime`` and ``CompoundRuntime``
+    (via ``.rt``) qualify."""
+    rt = getattr(runtime, "rt", runtime)
+    rep = AnalysisReport("affinity")
+    meshes = getattr(rt, "meshes", {})
+    workers = getattr(rt, "workers", {})
+    owned: Dict[object, str] = {}
+    for name, mesh in meshes.items():
+        for dev in sorted(_device_ids(mesh), key=repr):
+            if dev in owned:
+                rep.add(
+                    Severity.ERROR, "affinity.mesh-overlap",
+                    f"{owned[dev]}|{name}",
+                    f"sections {owned[dev]!r} and {name!r} share device "
+                    f"{dev!r}: two worker threads would interleave "
+                    "collective launches on one device set (XLA CPU "
+                    "deadlock); carve disjoint meshes")
+            else:
+                owned[dev] = name
+    for name in meshes:
+        w = workers.get(name)
+        if w is None:
+            rep.add(Severity.ERROR, "affinity.no-worker", name,
+                    f"section {name!r} has a mesh but no worker thread "
+                    "— its programs would launch from arbitrary threads")
+            continue
+        th = getattr(w, "_thread", None)
+        if th is not None and not th.is_alive():
+            rep.add(Severity.ERROR, "affinity.dead-worker", name,
+                    f"section {name!r}'s worker thread is not alive")
+    for name in workers:
+        if name not in meshes:
+            rep.add(Severity.WARNING, "affinity.no-mesh", name,
+                    f"worker {name!r} has no carved mesh — nothing to "
+                    "check")
+    if rep.ok:
+        rep.add(Severity.INFO, "affinity.wiring", "runtime",
+                f"{len(meshes)} section meshes pairwise disjoint, one "
+                "live worker each")
+    return rep

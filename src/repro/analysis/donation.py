@@ -1,0 +1,152 @@
+"""Donation linter (analysis pass ``donation``).
+
+AdamW donation is *real* on this backend: every worker-side update jit
+is compiled with ``donate_argnums`` on its optimizer-state (and
+error-feedback) argument, and ``jax.device_put`` is a no-copy identity
+when the target sharding already matches.  The failure mode this pass
+catches at build time — instead of a crash deep inside a worker jit —
+is a state tree entering more than one donating trajectory:
+
+* **reuse** — a params/opt tree that a previous donating step already
+  consumed (leaves report ``is_deleted()``) handed back to
+  ``install()``;
+* **cross-section aliasing** — the *same* buffer appearing in two
+  sections' state: section A's ``upd`` donates it, section B's next
+  jit reads a dead buffer;
+* **params/master aliasing** — an optimizer state whose fp32 master
+  leaves alias the live params tree (``adamw.init`` copies exactly to
+  prevent this): donating the state would delete the params.
+
+The pass also records the runtime's *donation signature* — which jits
+donate which argument — as INFO findings, so the report documents the
+state-flow the checks protect (generalizing the point check
+``repro.optim.adamw.check_live`` from a single callsite into a lint
+over the whole runtime).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.analysis.core import AnalysisReport, Severity, register
+from repro.optim.adamw import deleted_leaf_paths
+
+
+def _leaf_ids(tree: Any) -> Dict[int, str]:
+    """id -> keypath of every array-like leaf with a real buffer."""
+    out: Dict[int, str] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+            out[id(leaf)] = jax.tree_util.keystr(path)
+    return out
+
+
+def _donation_signature(runtime) -> Dict[str, str]:
+    """section -> description of its donating jits, read from the
+    runtime's jit tables (built with ``donate_argnums`` in
+    ``CompoundRuntime``)."""
+    sig: Dict[str, str] = {}
+    for name in getattr(runtime, "_update", {}):
+        parts = ["update(donates: opt state)"]
+        if name in getattr(runtime, "_compress_step", {}):
+            parts.append("compress_step(donates: EF residual)")
+        sig[name] = ", ".join(parts)
+    return sig
+
+
+@register("donation")
+def lint_state(params: Dict[str, Any], opts: Dict[str, Any], *,
+               runtime=None, passname: str = "donation",
+               ef: Optional[Dict[str, Any]] = None) -> AnalysisReport:
+    """Lint per-section state trees about to enter the donating update
+    trajectory.  ``runtime`` (a ``CompoundRuntime``) is optional and
+    only adds the donation-signature INFO findings."""
+    rep = AnalysisReport(passname)
+    if runtime is not None:
+        for name, sig in sorted(_donation_signature(runtime).items()):
+            rep.add(Severity.INFO, "donation.signature", name, sig)
+    # (1) reuse of an already-donated tree
+    for what, trees in (("params", params), ("opts", opts),
+                        ("ef", ef or {})):
+        for name, tree in trees.items():
+            dead = deleted_leaf_paths(tree)
+            if dead:
+                rep.add(
+                    Severity.ERROR, "donation.reuse",
+                    f"{what}[{name}]",
+                    f"{len(dead)} leaves are deleted (donated) buffers "
+                    f"(first: {dead[0]!r}) — this tree was consumed by a "
+                    "previous donating update step; re-place fresh state "
+                    "(CompoundRuntime.place / jax.device_put of a host "
+                    "copy) instead of re-using it")
+    # (2) the same buffer in two sections' state (either tree kind):
+    # one section's donating upd would delete the other's live state
+    seen: Dict[int, str] = {}
+    for what, trees in (("opts", opts), ("ef", ef or {})):
+        for name, tree in trees.items():
+            for lid, path in _leaf_ids(tree).items():
+                owner = f"{what}[{name}]{path}"
+                if lid in seen and not seen[lid].startswith(
+                        f"{what}[{name}]"):
+                    rep.add(
+                        Severity.ERROR, "donation.cross-section-alias",
+                        owner,
+                        f"buffer is shared with {seen[lid]} — a donating "
+                        "update in either section deletes the other's "
+                        "state")
+                else:
+                    seen.setdefault(lid, owner)
+    # (3) optimizer master/mu/nu leaves aliasing the params tree
+    for name, opt in opts.items():
+        if name not in params:
+            continue
+        p_ids = _leaf_ids(params[name])
+        for lid, path in _leaf_ids(opt).items():
+            if lid in p_ids:
+                rep.add(
+                    Severity.ERROR, "donation.params-alias",
+                    f"opts[{name}]{path}",
+                    f"optimizer state leaf aliases params[{name}]"
+                    f"{p_ids[lid]} — donating the state would delete "
+                    "live params (adamw.init copies for exactly this "
+                    "reason)")
+    return rep
+
+
+def lint_spec(spec, passname: str = "donation") -> AnalysisReport:
+    """Donation signature implied by a :class:`WorkloadSpec` alone —
+    which jits the generic runtime will compile with ``donate_argnums``
+    for each section.  Pure INFO: documents the state-flow the runtime
+    checks protect, without building any runtime (used by the ``--lint``
+    CLI)."""
+    rep = AnalysisReport(passname)
+    for s in spec.sections:
+        if not getattr(s, "trainable", False):
+            rep.add(Severity.INFO, "donation.signature", s.name,
+                    "fwd_only: no donating jits")
+            continue
+        parts = ["update(donates: opt state)"]
+        if getattr(s.parallel, "grad_compress", "none") != "none":
+            parts.append("compress_step(donates: EF residual)")
+        rep.add(Severity.INFO, "donation.signature", s.name,
+                ", ".join(parts))
+    return rep
+
+
+def lint_step_fn(step_fn, passname: str = "donation") -> AnalysisReport:
+    """Lint a built train/prefill/decode step's donation metadata
+    (``repro.train.step`` attaches ``_donates`` to each jitted step):
+    INFO when declared, WARNING for a jitted step with no declaration —
+    callers then can't know which arguments not to reuse."""
+    rep = AnalysisReport(passname)
+    don = getattr(step_fn, "_donates", None)
+    label = getattr(step_fn, "_donates_label", type(step_fn).__name__)
+    if don is None:
+        rep.add(Severity.WARNING, "donation.undeclared", label,
+                "jitted step carries no _donates metadata — donation "
+                "hazards of its arguments cannot be linted")
+    else:
+        rep.add(Severity.INFO, "donation.signature", label,
+                f"donates argnums {tuple(don)}")
+    return rep

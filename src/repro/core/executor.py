@@ -39,6 +39,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis.affinity import record as _affinity_record
 from repro.core.graph import SectionGraph
 from repro.core.messages import MessageQueue
 from repro.core.runtime import SectionWorker, TaskError
@@ -222,6 +223,7 @@ class StreamSession:
     def _timed(st: _IterationState, d: Dispatch):
         def timed():
             _task_local.slot = {"start": time.perf_counter()}
+            _affinity_record(d.section)
             return _block(d.fn())
         return timed
 

@@ -15,7 +15,7 @@ data-flow edges.  Construction rules implemented:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.core.types import ArchConfig, ParallelConfig, SectionConfig
 

@@ -28,6 +28,7 @@ buffers.  Keys without a ``/`` are unscoped and never evicted.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass
@@ -37,6 +38,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_log = logging.getLogger("repro.messages")
+
+
+class StaleScopeError(RuntimeError):
+    """A push or pull targeted an iteration scope that was already
+    retired by ``evict_scope`` — cross-iteration traffic may not alias a
+    sealed namespace.  Subclasses RuntimeError so pre-existing handlers
+    keep working."""
+
+
+class PullTimeout(TimeoutError):
+    """A blocking ``pull`` exhausted its timeout.  The message names the
+    producing section, the iteration scope being waited on, and the keys
+    that ARE buffered on the edge (a stale scope or a typo'd microbatch
+    index is usually the answer).  Subclasses TimeoutError so
+    pre-existing handlers keep working."""
 
 
 @dataclass(frozen=True)
@@ -93,7 +111,7 @@ class MessageQueue:
             with self._lock:
                 retired = sc in self._retired_scopes
             if retired:
-                raise RuntimeError(
+                raise StaleScopeError(
                     f"{op}({src}->{dst}, {key}): iteration scope {sc!r} "
                     "is already retired — cross-iteration traffic may "
                     "not alias a retired namespace")
@@ -158,10 +176,15 @@ class MessageQueue:
                     # diagnosable: the key that IS buffered (a stale scope,
                     # a typo'd microbatch index) is usually the answer
                     pending = sorted(ch.metas)
-                    raise TimeoutError(
+                    sc = self._scope(key)
+                    scope_note = ("" if sc is None else
+                                  f" into iteration scope {sc!r}")
+                    raise PullTimeout(
                         f"pull({src}->{dst}, {key}): "
-                        f"{len(metas)}/{need} fragments after {timeout}s; "
-                        f"pending keys on this edge: {pending}")
+                        f"{len(metas)}/{need} fragments after {timeout}s "
+                        f"— producer section {src!r} never pushed "
+                        f"{key!r}{scope_note}; pending keys on this "
+                        f"edge: {pending}")
         out = _assemble(frags, metas)
         if sharding is not None:
             out = jax.device_put(out, sharding)
@@ -188,6 +211,11 @@ class MessageQueue:
                 if keys:
                     evicted[f"{src}->{dst}"] = sorted(keys)
                     ch.cv.notify_all()
+        for edge, keys in sorted(evicted.items()):
+            _log.warning(
+                "evict_scope(%r): dropped %d leftover message(s) on %s: "
+                "%s — a producer pushed something no consumer ever "
+                "pulled", scope, len(keys), edge, keys)
         return evicted
 
     # ------------------------------------------------------------------ #

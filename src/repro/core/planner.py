@@ -18,9 +18,8 @@ DP^fr × fanout = DP^sr on every edge.
 from __future__ import annotations
 
 import itertools
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 from repro.core import cost_model as cmdl
 from repro.core.graph import SectionGraph

@@ -16,15 +16,14 @@ from __future__ import annotations
 import queue
 import threading
 import traceback
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh
 
 from repro.core.graph import SectionGraph
 from repro.core.messages import MessageQueue
-from repro.core.types import SectionConfig
 
 
 def carve_sections(graph: SectionGraph, devices: Optional[Sequence] = None,
@@ -117,6 +116,11 @@ class SectionWorker:
         self._thread.start()
 
     def _run(self):
+        # mark this thread as the section's one launching thread, so the
+        # affinity analysis pass can attribute dispatch execution
+        # precisely (repro.analysis.affinity.check_trace)
+        from repro.analysis.affinity import worker_section
+        worker_section.name = self.name
         while True:
             task = self.inbox.get()
             if task is None:

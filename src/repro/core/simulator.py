@@ -21,7 +21,7 @@ Zero-duration phases complete instantly and occupy no resource.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 

@@ -350,6 +350,16 @@ class WorkloadSpec:
                 f"global_batch={self.global_batch} is not a multiple of "
                 f"mbs={self.mbs}")
         self.topo_order()
+        # dispatch-graph deadlock proof (repro.analysis.deadlock): the
+        # blocking-pull order submit_iteration will emit — incl. the
+        # grad-norm rendezvous and lookahead cross-iteration FIFO
+        # coupling — must be acyclic with every pull satisfiable.
+        # Reject the spec here instead of hanging in drain().
+        from repro.analysis import deadlock as _deadlock
+        _deadlock.check_spec(self, n_mb=2, lookahead=1).raise_on_error(
+            ValueError,
+            f"workload {self.name!r}: dispatch-graph deadlock analysis "
+            "failed")
 
     # ------------------------------------------------------------------ #
     def to_graph(self) -> SectionGraph:
@@ -499,6 +509,13 @@ class CompoundRuntime:
                                                       peak_lr=1e-3)
         self.graph = spec.to_graph()
         self.rt = MaestroRuntime(self.graph, devices)
+        # mesh-thread affinity (repro.analysis.affinity): disjoint
+        # section meshes, one live worker each — the wiring invariant
+        # the XLA-CPU collective-launch contract rests on
+        from repro.analysis import affinity as _affinity
+        _affinity.check_wiring(self.rt).raise_on_error(
+            RuntimeError,
+            f"workload {spec.name!r}: mesh-thread affinity check failed")
         self.executor = self.rt.executor()
         self.last_execution = None
         #: cross-iteration pipelining depth: how many iterations beyond
@@ -1216,15 +1233,16 @@ class CompoundRuntime:
         if missing_o:
             raise ValueError(f"install: missing optimizer state for "
                              f"trainable sections {sorted(missing_o)}")
-        # donated-buffer guard: the worker-side update jits DONATE the
-        # installed optimizer state, and jax.device_put is a no-copy
-        # identity when the sharding already matches — so re-installing a
-        # tree a previous stream consumed would crash deep inside a
-        # worker jit.  Catch it here with a named error instead.
-        for n in params:
-            adamw.check_live(params[n], f"install: params[{n!r}]")
-        for n in opts:
-            adamw.check_live(opts[n], f"install: opts[{n!r}]")
+        # donation lint (repro.analysis.donation): the worker-side update
+        # jits DONATE the installed optimizer state, and jax.device_put
+        # is a no-copy identity when the sharding already matches — so
+        # re-installing a tree a previous stream consumed, or installing
+        # trees that alias each other, would crash deep inside a worker
+        # jit.  Catch every such hazard here with a named error instead.
+        from repro.analysis import donation as _donation
+        _donation.lint_state(params, opts, runtime=self,
+                             ef=self._ef).raise_on_error(
+            adamw.DonatedStateError, "install: donation lint failed")
         self._params = dict(params)
         self._opts = dict(opts)
         # error-feedback residuals for compressed sections: zero-init on

@@ -9,7 +9,7 @@ builds the scheduler 6-tuples.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List
 
 import jax.numpy as jnp
 import numpy as np

@@ -32,7 +32,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import AXIS_MODEL, AXIS_SEQ, axis_size, shard_map

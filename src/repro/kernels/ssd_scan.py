@@ -16,12 +16,10 @@ Shapes: x [b,s,h,p], dt [b,s,h], A [h], B [b,s,n], C [b,s,n], D [h].
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
 
 
 def _chunk_terms(xc, dtc, A, Bc, Cc):

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config, get_reduced
+from repro.configs import get_config, get_reduced
 from repro.launch.train import PRESETS
 from repro.models.model import build_model
 

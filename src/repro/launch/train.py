@@ -15,7 +15,6 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ARCH_NAMES, get_config, get_reduced

@@ -9,8 +9,6 @@ cross-attention is position-free as in the original.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ Decode cache per layer: ``{"conv": [B, conv_w-1, d_conv_ch],
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

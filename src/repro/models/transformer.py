@@ -13,7 +13,7 @@ embeddings (delivered by the stubbed frontend) into the token stream.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

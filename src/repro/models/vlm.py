@@ -9,7 +9,6 @@ describes (Qwen3-VL style) and a projection into the LM's embedding space.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

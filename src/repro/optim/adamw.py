@@ -6,7 +6,7 @@ parameter's sharding spec *extended over free mesh axes* (ZeRO) by
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,25 +23,37 @@ class DonatedStateError(RuntimeError):
     """
 
 
-def check_live(tree, what: str = "optimizer state") -> None:
-    """Raise :class:`DonatedStateError` if any leaf of ``tree`` was
-    deleted by a donating jit.  A no-op under tracing (tracers carry no
-    buffers), so it is safe to call from inside jitted update fns."""
-    for leaf in jax.tree_util.tree_leaves(tree):
+def deleted_leaf_paths(tree) -> list:
+    """Keypaths of every leaf of ``tree`` deleted by a donating jit.
+    Tracers and array-likes without real buffers are skipped, so this is
+    safe to call from inside jitted update fns (returns []).  The
+    donation linter (``repro.analysis.donation``) builds on this to lint
+    whole runtimes instead of single trees."""
+    dead = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         deleted = getattr(leaf, "is_deleted", None)
         if not callable(deleted):
             continue
         try:
-            dead = deleted()
+            if deleted():
+                dead.append(jax.tree_util.keystr(path))
         except Exception:      # tracer / array-like without real buffers
             continue
-        if dead:
-            raise DonatedStateError(
-                f"{what} contains deleted (donated) buffers — this tree "
-                "was consumed by a previous donating update step. "
-                "Re-`place` fresh state (CompoundRuntime.place / "
-                "jax.device_put of a host copy) instead of re-using a "
-                "tree that has already been donated.")
+    return dead
+
+
+def check_live(tree, what: str = "optimizer state") -> None:
+    """Raise :class:`DonatedStateError` if any leaf of ``tree`` was
+    deleted by a donating jit.  A no-op under tracing (tracers carry no
+    buffers), so it is safe to call from inside jitted update fns."""
+    dead = deleted_leaf_paths(tree)
+    if dead:
+        raise DonatedStateError(
+            f"{what} contains deleted (donated) buffers (first dead "
+            f"leaf: {dead[0]!r}) — this tree was consumed by a previous "
+            "donating update step. Re-`place` fresh state "
+            "(CompoundRuntime.place / jax.device_put of a host copy) "
+            "instead of re-using a tree that has already been donated.")
 
 
 class AdamWState(NamedTuple):

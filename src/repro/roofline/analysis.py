@@ -494,6 +494,41 @@ def dot_flops_matching(text: str, out_last_dim: int) -> float:
     return total
 
 
+def dot_flops_by_width(text: str) -> Dict[int, float]:
+    """Multiplier-scaled dot FLOPs keyed by OUTPUT last dim — the full
+    width histogram behind :func:`dot_flops_matching`.  The declarative
+    HLO gates (``repro.analysis.hlo_gates``) quote it on failure so a
+    missing width is diagnosable from the finding alone."""
+    comps = parse_hlo(text)
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else next(iter(comps))
+    mf, _ = _multipliers(comps, entry)
+    out: Dict[int, float] = {}
+    for name, comp in comps.items():
+        kf = mf.get(name, 0.0)
+        if kf == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode != "dot":
+                continue
+            dims = _first_shape_dims(ins.type_str)
+            if dims:
+                w = dims[-1]
+                out[w] = out.get(w, 0.0) + kf * _dot_flops(
+                    ins, comp.table)
+    return out
+
+
+def collective_families(text: str) -> Dict[str, float]:
+    """Executed collective families -> total ring-model wire bytes.
+    The 'no unexpected all-gathers / silent replication' gates compare
+    this against a regime's declared profile."""
+    out: Dict[str, float] = {}
+    for op in collective_ops(text):
+        out[op.family] = out.get(op.family, 0.0) + op.wire_bytes
+    return out
+
+
 # --------------------------------------------------------------------------- #
 def roofline_terms(stats: HloStats, *, hw=None) -> Dict[str, float]:
     """Three roofline terms in seconds (per chip; HLO is post-SPMD)."""

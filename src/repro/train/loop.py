@@ -17,13 +17,12 @@ import signal
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.optim import adamw
 
 
 @dataclass

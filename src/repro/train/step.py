@@ -37,7 +37,6 @@ from __future__ import annotations
 
 import contextlib
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -368,6 +367,10 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
                            {"loss": rep, "grad_norm": rep, "lr": rep},
                            ef_shard),
             donate_argnums=(0, 1, 4))
+        # donation metadata for the analysis pass (repro.analysis
+        # .donation.lint_step_fn): which argnums this jit consumes
+        step._donates = (0, 1, 4)
+        step._donates_label = "train_step[compressed](params, opt, ef)"
 
         def ef_init(params):
             """Zero-initialized stacked [dp, ...] error-feedback residual,
@@ -387,6 +390,8 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
         out_shardings=(p_shard, o_shard,
                        {"loss": rep, "grad_norm": rep, "lr": rep}),
         donate_argnums=(0, 1))
+    step._donates = (0, 1)
+    step._donates_label = "train_step(params, opt)"
     shardings = {"params": p_shard, "opt": o_shard, "batch": b_shard}
     return step, shardings
 
@@ -421,6 +426,8 @@ def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
 
     step = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
                    out_shardings=(logits_shard, c_shard))
+    step._donates = ()
+    step._donates_label = "prefill_step"
     return step, {"params": p_shard, "batch": b_shard, "cache": c_shard}
 
 
@@ -447,5 +454,7 @@ def build_decode_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
                    in_shardings=(p_shard, c_shard, b_shard["token"], rep),
                    out_shardings=(logits_shard, c_shard),
                    donate_argnums=(1,))
+    step._donates = (1,)
+    step._donates_label = "decode_step(cache)"
     return step, {"params": p_shard, "cache": c_shard,
                   "token": b_shard["token"]}

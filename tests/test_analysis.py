@@ -1,0 +1,497 @@
+"""Static-analysis suite: finding/report core, the dispatch-graph
+deadlock detector, the donation linter, the mesh-thread affinity checker
+and the declarative HLO gate engine — including the negative paths: a
+deliberately-cyclic WorkloadSpec and reused donated state must both be
+rejected at build time with findings naming the section/edge."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.workload as wl
+from repro.analysis import (AnalysisReport, Finding, PASSES, Severity,
+                            affinity, check_events, check_spec,
+                            hlo_gates, lint_spec, lint_state,
+                            lint_step_fn, model_events)
+from repro.analysis.deadlock import Event
+from repro.configs import get_reduced
+from repro.core.types import ParallelConfig
+from repro.optim.adamw import DonatedStateError
+
+
+def _cfg():
+    return get_reduced("qwen1.5-0.5b").replace(
+        dtype="float32", num_layers=2, vocab_size=64, d_ff=128)
+
+
+def _producer(name="prod", port=None, mode="fwd_only", consumes=()):
+    port = port or wl.Port("h", (wl.SEQ, 16), "float32")
+    return wl.SectionSpec(
+        name, _cfg(), ParallelConfig(),
+        fn=lambda p, x: {"h": x["tokens"]}, params={},
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        emits=(port,), mode=mode, consumes=tuple(consumes))
+
+
+def _loss(consumes=(), name="crit"):
+    return wl.SectionSpec(
+        name, _cfg(), ParallelConfig(),
+        fn=lambda p, x: 0.0, params={},
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32")},
+        consumes=tuple(consumes), loss=True, critical=True)
+
+
+def _spec(*sections):
+    return wl.WorkloadSpec("t", tuple(sections), seq_len=8,
+                           global_batch=4, mbs=2)
+
+
+# --------------------------------------------------------------------- #
+# core: findings, reports, registry
+# --------------------------------------------------------------------- #
+def test_report_partitions_and_raises():
+    rep = AnalysisReport("p")
+    rep.add(Severity.INFO, "x.i", "a", "fine")
+    rep.add(Severity.WARNING, "x.w", "b", "meh")
+    assert rep.ok and len(rep.warnings) == 1
+    rep.add(Severity.ERROR, "x.e", "edge", "broken thing")
+    assert not rep.ok and len(rep.errors) == 1
+    with pytest.raises(RuntimeError, match=r"x\.e \(edge\): broken"):
+        rep.raise_on_error(RuntimeError, "gate failed")
+    assert "[ERROR] x.e (edge)" in str(Finding(
+        Severity.ERROR, "x.e", "edge", "broken thing"))
+    assert "1 error(s), 1 warning(s), 1 info" in rep.summary()
+    assert "x.i" not in rep.render(min_severity=Severity.WARNING)
+
+
+def test_pass_registry_contains_all_passes():
+    assert {"deadlock", "donation", "affinity", "hlo"} <= set(PASSES)
+
+
+# --------------------------------------------------------------------- #
+# deadlock pass
+# --------------------------------------------------------------------- #
+def test_clean_spec_proven_deadlock_free():
+    port = wl.Port("h", (wl.SEQ, 16), "float32")
+    spec = _spec(_producer(port=port),
+                 _loss(consumes=[wl.Consume("prod", port)]))
+    for la in (0, 1):
+        assert check_spec(spec, n_mb=2, lookahead=la).ok
+
+
+def test_cyclic_spec_rejected_at_validate_naming_sections():
+    """The ISSUE acceptance path: a deliberately-cyclic WorkloadSpec is
+    rejected at build time, not by a hang in drain()."""
+    pa = wl.Port("h", (wl.SEQ, 16), "float32")
+    pb = wl.Port("g", (wl.SEQ, 16), "float32")
+    a = _producer("a", port=pa, consumes=[wl.Consume("b", pb)])
+    b = _producer("b", port=pb, consumes=[wl.Consume("a", pa)])
+    spec = _spec(a, b, _loss(consumes=[wl.Consume("a", pa)]))
+    with pytest.raises(ValueError, match="cycle"):
+        spec.validate()
+    # the analysis pass names the sections and the queue edges on the
+    # wait cycle
+    rep = check_spec(spec, n_mb=1)
+    assert not rep.ok
+    cyc = [f for f in rep.errors if f.check == "deadlock.cycle"]
+    assert cyc, rep.render()
+    assert "a" in cyc[0].subject and "b" in cyc[0].subject
+    assert "s0/a.h.0" in cyc[0].message and "s0/b.g.0" in cyc[0].message
+
+
+def test_unsatisfied_cotangent_pull_reported():
+    """A trainable producer feeding a fwd_only consumer waits forever on
+    a cotangent nobody pushes — the pass names the edge and the hang."""
+    ph = wl.Port("h", (wl.SEQ, 16), "float32")
+    pg = wl.Port("g", (wl.SEQ, 16), "float32")
+    prod = _producer("prod", port=ph, mode="fwd_bwd")
+    mid = _producer("mid", port=pg, mode="fwd_only",
+                    consumes=[wl.Consume("prod", ph)])
+    spec = _spec(prod, mid, _loss(consumes=[wl.Consume("mid", pg)]))
+    rep = check_spec(spec, n_mb=1)
+    bad = [f for f in rep.errors if f.check == "deadlock.unsatisfied-pull"]
+    assert bad, rep.render()
+    assert "hang in drain()" in bad[0].message
+    assert "ct.prod.h" in bad[0].message
+
+
+def test_rendezvous_modeled_and_acyclic():
+    """Two trainable sections: the grad-norm rendezvous (push to every
+    peer before pulling any) must appear in the model and stay acyclic
+    even with lookahead chaining two scopes."""
+    ph = wl.Port("h", (wl.SEQ, 16), "float32")
+    prod = _producer("prod", port=ph, mode="fwd_bwd")
+    spec = _spec(prod, _loss(consumes=[wl.Consume("prod", ph)]))
+    chains = model_events(spec, 2, ["s0", "s1"])
+    gnorm = [e for evs in chains.values() for e in evs
+             if "gnorm" in e.key]
+    assert {e.key for e in gnorm} == {"s0/gnorm.prod", "s0/gnorm.crit",
+                                      "s1/gnorm.prod", "s1/gnorm.crit"}
+    for evs in chains.values():
+        ups = [e for e in evs if e.task == "upd"]
+        assert [e.kind for e in ups] == ["push", "pull"] * 2
+    assert check_spec(spec, n_mb=2, lookahead=1).ok
+
+
+def test_check_events_reports_synthetic_cycle_and_duplicate_push():
+    """The generic wait-graph checker on a hand-built bad event graph:
+    two workers each blocking-pull what the other pushes only later."""
+    chains = {
+        "a": [Event("a", "t0", "pull", "b", "a", "s0/k1"),
+              Event("a", "t0", "push", "a", "b", "s0/k2")],
+        "b": [Event("b", "t0", "pull", "a", "b", "s0/k2"),
+              Event("b", "t0", "push", "b", "a", "s0/k1"),
+              Event("b", "t1", "push", "b", "a", "s0/k1")],
+    }
+    rep = check_events(chains)
+    cyc = [f for f in rep.errors if f.check == "deadlock.cycle"]
+    assert cyc and cyc[0].subject == "a,b"
+    assert "s0/k1" in cyc[0].message and "s0/k2" in cyc[0].message
+    dup = [f for f in rep.warnings if f.check == "deadlock.duplicate-push"]
+    assert dup and "s0/k1" in dup[0].message
+
+
+# --------------------------------------------------------------------- #
+# donation pass
+# --------------------------------------------------------------------- #
+def test_donation_reuse_finding_names_tree_and_leaf():
+    x = jnp.ones((4,), jnp.float32)
+    x.delete()
+    rep = lint_state({"s": {"w": x}}, {})
+    bad = [f for f in rep.errors if f.check == "donation.reuse"]
+    assert bad and bad[0].subject == "params[s]"
+    assert "'w'" in bad[0].message
+
+
+def test_donation_cross_section_alias_finding():
+    shared = jnp.ones((4,), jnp.float32)
+    rep = lint_state({}, {"a": {"mu": shared}, "b": {"mu": shared}})
+    bad = [f for f in rep.errors
+           if f.check == "donation.cross-section-alias"]
+    assert bad, rep.render()
+    assert "opts[a]" in bad[0].message or "opts[a]" in bad[0].subject
+
+
+def test_donation_params_alias_finding():
+    w = jnp.ones((4,), jnp.float32)
+    rep = lint_state({"s": {"w": w}}, {"s": {"master": {"w": w}}})
+    bad = [f for f in rep.errors if f.check == "donation.params-alias"]
+    assert bad and "params[s]" in bad[0].message
+
+
+def test_donation_clean_state_passes():
+    p = {"s": {"w": jnp.ones((4,), jnp.float32)}}
+    o = {"s": {"mu": jnp.zeros((4,), jnp.float32)}}
+    assert lint_state(p, o).ok
+
+
+def test_donation_step_fn_metadata():
+    def step():
+        pass
+    step._donates = (0, 1)
+    step._donates_label = "train_step(params, opt)"
+    rep = lint_step_fn(step)
+    assert rep.ok and "argnums (0, 1)" in rep.findings[0].message
+
+    def bare():
+        pass
+    rep2 = lint_step_fn(bare)
+    assert [f.check for f in rep2.warnings] == ["donation.undeclared"]
+
+
+def test_donation_spec_signature():
+    ph = wl.Port("h", (wl.SEQ, 16), "float32")
+    prod = _producer("prod", port=ph, mode="fwd_bwd")
+    spec = _spec(prod, _loss(consumes=[wl.Consume("prod", ph)]))
+    rep = lint_spec(spec)
+    by = {f.subject: f.message for f in rep.findings}
+    assert "opt state" in by["prod"] and "opt state" in by["crit"]
+
+
+def test_built_train_steps_declare_donation():
+    from repro.core.types import ShapeConfig
+    from repro.dist import sharding as shd
+    from repro.models.model import build_model
+    from repro.train import step as step_mod
+
+    cfg = _cfg()
+    model = build_model(cfg, impl="ref")
+    par = ParallelConfig(mbs=4)
+    mesh = shd.section_mesh(jax.devices()[:1], par)
+    step, _ = step_mod.build_train_step(model, mesh, par,
+                                        ShapeConfig("t", "train", 8, 4))
+    rep = lint_step_fn(step)
+    assert rep.ok and "argnums (0, 1)" in rep.findings[0].message
+
+
+# --------------------------------------------------------------------- #
+# affinity pass
+# --------------------------------------------------------------------- #
+class _FakeMesh:
+    def __init__(self, ids):
+        self.devices = np.array(ids)
+
+
+class _FakeThread:
+    def __init__(self, alive=True):
+        self._alive = alive
+
+    def is_alive(self):
+        return self._alive
+
+
+class _FakeWorker:
+    def __init__(self, alive=True):
+        self._thread = _FakeThread(alive)
+
+
+class _FakeRT:
+    def __init__(self, meshes, workers):
+        self.meshes = meshes
+        self.workers = workers
+
+
+def test_affinity_wiring_clean():
+    rt = _FakeRT({"a": _FakeMesh([0, 1]), "b": _FakeMesh([2, 3])},
+                 {"a": _FakeWorker(), "b": _FakeWorker()})
+    rep = affinity.check_wiring(rt)
+    assert rep.ok
+    assert [f.check for f in rep.findings] == ["affinity.wiring"]
+
+
+def test_affinity_mesh_overlap_names_both_sections():
+    rt = _FakeRT({"a": _FakeMesh([0, 1]), "b": _FakeMesh([1, 2])},
+                 {"a": _FakeWorker(), "b": _FakeWorker()})
+    rep = affinity.check_wiring(rt)
+    bad = [f for f in rep.errors if f.check == "affinity.mesh-overlap"]
+    assert bad and bad[0].subject == "a|b"
+    assert "deadlock" in bad[0].message
+
+
+def test_affinity_missing_and_dead_worker():
+    rt = _FakeRT({"a": _FakeMesh([0]), "b": _FakeMesh([1])},
+                 {"b": _FakeWorker(alive=False)})
+    rep = affinity.check_wiring(rt)
+    checks = {f.check for f in rep.errors}
+    assert checks == {"affinity.no-worker", "affinity.dead-worker"}
+
+
+def test_affinity_trace_attribution():
+    ok = affinity.check_trace([("s", "section-s", "s"),
+                               ("s", "section-s", "s")])
+    assert ok.ok and "2 dispatches" in ok.findings[0].message
+    bad = affinity.check_trace([("s", "MainThread", None)])
+    fails = [f for f in bad.errors if f.check == "affinity.foreign-thread"]
+    assert fails and "not a section worker" in fails[0].message
+    multi = affinity.check_trace([("s", "section-s", "s"),
+                                  ("s", "section-t", "t")])
+    assert {f.check for f in multi.errors} == {"affinity.foreign-thread",
+                                               "affinity.multiple-threads"}
+
+
+def test_affinity_record_via_real_section_worker():
+    """SectionWorker._run marks its thread; record() inside a task must
+    attribute the dispatch to that section's own worker."""
+    from repro.core.runtime import SectionWorker
+
+    w = SectionWorker("vit")
+    with affinity.tracking() as trace:
+        w.submit("t0", lambda: affinity.record("vit"))
+        w.drain(1)
+        affinity.record("vit")          # main thread: foreign
+    w.stop()
+    rep = affinity.check_trace(trace)
+    fails = [f for f in rep.errors if f.check == "affinity.foreign-thread"]
+    assert fails, rep.render()          # the main-thread record
+    assert ("vit", "section-vit", "vit") in trace
+
+
+# --------------------------------------------------------------------- #
+# end-to-end: a real CompoundRuntime is wired through all three passes
+# --------------------------------------------------------------------- #
+def _lm_spec():
+    from repro.models.model import build_model
+    cfg = _cfg()
+    model = build_model(cfg, impl="ref")
+
+    def lm_fn(p, x):
+        return model.loss(p, {"tokens": x["tokens"],
+                              "labels": x["labels"]})[0]
+
+    sec = wl.SectionSpec(
+        "lm", cfg, ParallelConfig(), fn=lm_fn, params=model.specs(),
+        inputs={"tokens": wl.Field((wl.SEQ,), "int32"),
+                "labels": wl.Field((wl.SEQ,), "int32")},
+        loss=True, critical=True)
+    return wl.WorkloadSpec("lm-only", (sec,), seq_len=8,
+                           global_batch=4, mbs=2)
+
+
+def test_runtime_install_rejects_donated_state_and_traces_clean():
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, 64, (4, 8)).astype(np.int32),
+             "labels": rng.integers(0, 64, (4, 8)).astype(np.int32)}
+    with wl.CompoundRuntime(_lm_spec()) as rt:
+        # static wiring holds on the real runtime
+        assert affinity.check_wiring(rt).ok
+        p, o = rt.init(jax.random.PRNGKey(0))
+        # dynamic affinity: every dispatch of one training iteration
+        # runs on the lm section's own worker thread
+        with affinity.tracking() as trace:
+            rt.train_iteration(p, o, batch, 0)
+        assert trace, "executor did not record any dispatches"
+        assert affinity.check_trace(trace).ok
+        # donated-state reuse is rejected at install time with a finding
+        # naming the section
+        p2, o2 = rt.init(jax.random.PRNGKey(1))
+        jax.tree_util.tree_leaves(o2["lm"].mu)[0].delete()
+        with pytest.raises(DonatedStateError,
+                           match=r"donation\.reuse \(opts\[lm\]\)"):
+            rt.install(p2, o2)
+
+
+# --------------------------------------------------------------------- #
+# HLO gate engine
+# --------------------------------------------------------------------- #
+_SYNTH_HLO = """\
+HloModule synth
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024], p1: u16[128]) -> (f32[1024], u16[1024]) {
+  %p0 = f32[1024]{0} parameter(0)
+  %p1 = u16[128]{0} parameter(1)
+  %ar = f32[1024]{0} all-reduce(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = u16[1024]{0} all-gather(%p1), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %t = (f32[1024]{0}, u16[1024]{0}) tuple(%ar, %ag)
+}
+"""
+
+
+def test_resolve_expressions():
+    syms = {"pp": 4, "vocab": 1024, "gb": 8}
+    assert hlo_gates.resolve(7, syms) == 7.0
+    assert hlo_gates.resolve("vocab/pp", syms) == 256.0
+    assert hlo_gates.resolve("0.05*pp", syms) == pytest.approx(0.2)
+    assert hlo_gates.resolve("vocab/pp/2", syms) == 128.0
+    with pytest.raises(ValueError, match="unknown symbol"):
+        hlo_gates.resolve("nope*2", syms)
+    with pytest.raises(ValueError, match="unresolvable"):
+        hlo_gates.resolve("a + b", syms)
+
+
+def test_validate_gate_schema_errors():
+    base = {"name": "g", "description": "d", "programs": ["p"],
+            "checks": []}
+    with pytest.raises(ValueError, match="missing 'name'"):
+        hlo_gates.validate_gate({k: v for k, v in base.items()
+                                 if k != "name"})
+    with pytest.raises(ValueError, match="unknown kind"):
+        hlo_gates.validate_gate(
+            {**base, "checks": [{"kind": "bogus"}]})
+    with pytest.raises(ValueError, match="not declared"):
+        hlo_gates.validate_gate(
+            {**base, "checks": [{"kind": "wire_dtype", "program": "q",
+                                 "dtype": "f32", "op": "<=",
+                                 "value": 1}]})
+    with pytest.raises(ValueError, match="op"):
+        hlo_gates.validate_gate(
+            {**base, "checks": [{"kind": "wire_dtype", "program": "p",
+                                 "dtype": "f32", "op": "~",
+                                 "value": 1}]})
+
+
+def _gate(tmp_path, raw):
+    f = tmp_path / "g.json"
+    f.write_text(json.dumps(raw))
+    return hlo_gates.load_gate(f)
+
+
+def test_gate_dot_flops_and_ratio(tmp_path):
+    a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    full = jax.jit(lambda a, b: a @ b).lower(
+        a, jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    ).compile().as_text()
+    shard = jax.jit(lambda a, b: a @ b).lower(
+        a, jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    ).compile().as_text()
+    gate = _gate(tmp_path, {
+        "name": "toy", "description": "d",
+        "symbols": {"w": 32, "shards": 4},
+        "programs": ["full", "shard"],
+        "checks": [
+            {"kind": "dot_flops", "id": "full_present", "program": "full",
+             "width": "w", "op": ">", "value": 0},
+            {"kind": "dot_flops", "id": "no_full_in_shard",
+             "program": "shard", "width": "w", "op": "==", "value": 0},
+            {"kind": "dot_flops_ratio", "id": "reduction",
+             "num_program": "full", "num_width": "w",
+             "den_program": "shard", "den_width": "w/shards",
+             "target": "shards", "rtol": 0.05},
+        ]})
+    rep, measured = hlo_gates.evaluate(
+        gate, {"full": full, "shard": shard})
+    assert rep.ok, rep.render()
+    assert measured["full_present"] == pytest.approx(2 * 8 * 16 * 32)
+    assert measured["reduction"] == pytest.approx(4.0)
+    # symbol override flips the gate red and quotes the histogram
+    rep2, _ = hlo_gates.evaluate(gate, {"full": full, "shard": shard},
+                                 symbols={"w": 8})
+    bad = [f for f in rep2.errors if f.check == "hlo.dot_flops"]
+    assert bad and "width histogram" in bad[0].message
+
+
+def test_gate_wire_dtype_family_and_subset(tmp_path):
+    gate = _gate(tmp_path, {
+        "name": "wires", "description": "d", "symbols": {},
+        "programs": ["step"],
+        "checks": [
+            {"kind": "wire_dtype", "id": "u16", "program": "step",
+             "dtype": "u16", "op": ">", "value": 0},
+            {"kind": "wire_dtype", "id": "no_s8", "program": "step",
+             "dtype": "s8", "op": "==", "value": 0},
+            {"kind": "family_dtype_wire", "id": "f32_ar",
+             "program": "step", "family": "all-reduce", "dtype": "f32",
+             "op": "<=", "value": 6144},
+            {"kind": "collectives_subset", "id": "fams",
+             "program": "step", "allowed": ["all-reduce"]},
+        ]})
+    rep, measured = hlo_gates.evaluate(gate, {"step": _SYNTH_HLO})
+    assert measured["u16"] == pytest.approx(7 / 8 * 1024 * 2)
+    assert measured["f32_ar"] == pytest.approx(2 * 3 / 4 * 1024 * 4)
+    sub = [f for f in rep.errors if f.check == "hlo.collectives_subset"]
+    assert sub and "all-gather" in sub[0].message
+    assert "silent replication" in sub[0].message
+
+
+def test_gate_wire_total_ratio_and_missing_program(tmp_path):
+    gate = _gate(tmp_path, {
+        "name": "r", "description": "d", "symbols": {},
+        "programs": ["a", "b"],
+        "checks": [
+            {"kind": "wire_total_ratio", "id": "ratio",
+             "num_program": "a", "den_program": "b",
+             "op": "<=", "value": 1.0},
+        ]})
+    rep, measured = hlo_gates.evaluate(
+        gate, {"a": _SYNTH_HLO, "b": _SYNTH_HLO})
+    assert rep.ok and measured["ratio"] == pytest.approx(1.0)
+    rep2, _ = hlo_gates.evaluate(gate, {"a": _SYNTH_HLO})
+    assert [f.check for f in rep2.errors] == ["hlo.missing-program"]
+
+
+def test_committed_gate_files_all_load():
+    paths = hlo_gates.list_gates()
+    names = {p.stem for p in paths}
+    assert {"vp_ce", "tp_in_stage", "compress", "regime_pp2",
+            "regime_cp2", "regime_pp2tp2",
+            "regime_compressed"} <= names
+    for p in paths:
+        gate = hlo_gates.load_gate(p)      # schema-validates
+        assert gate.checks, p

@@ -1,6 +1,4 @@
 """Checkpointing: roundtrip, atomic commit, retention, resume."""
-import json
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Data pipeline: determinism, modality mixture, mask semantics."""
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import (lm_batches, sample_modalities,

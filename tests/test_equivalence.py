@@ -11,7 +11,6 @@ model updates as the original unmodified training process").
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as cfgs
 from repro.models.model import build_model
@@ -75,7 +74,6 @@ def test_distill_colocation_equals_naive():
     teacher logits."""
     from repro.distill.workload import distill_loss, teacher_hidden
     from repro.models import common as cm
-    from repro.models import transformer as tf
 
     t_cfg = cfgs.get_reduced("qwen2.5-32b").replace(dtype="float32",
                                                     vocab_size=512)

@@ -1,6 +1,5 @@
 """Section-graph construction rules (§3.1): mutually-exclusive encoder
 colocation, flag propagation, and the one-critical-section invariant."""
-import pytest
 
 from repro.configs import get_reduced
 from repro.core.graph import SectionGraph, build_distill_graph, \

@@ -1,13 +1,15 @@
 """MessageQueue unit tests (single device): per-key metadata indexing,
 device-side assembly of axis-0-contiguous fragments, host fallback for
 arbitrary fragment layouts, and M-to-N composition."""
+import logging
 import threading
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.messages import MessageQueue, _axis0_contiguous
+from repro.core.messages import (MessageQueue, PullTimeout,
+                                 StaleScopeError, _axis0_contiguous)
 
 
 def test_m_to_n_axis0_contiguous_device_path():
@@ -156,3 +158,71 @@ def test_evict_scope_clean_iteration_reports_nothing():
     q.push("a", "b", "s7/x", jnp.zeros((2,)))
     q.pull("a", "b", "s7/x")
     assert q.evict_scope("s7") == {}
+
+
+# --------------------------------------------------------------------------- #
+# Retirement diagnosability (satellite): named errors, eviction logging,
+# stats after eviction
+# --------------------------------------------------------------------------- #
+def test_sealed_scope_raises_named_error():
+    """Stale traffic into a retired scope raises the NAMED
+    StaleScopeError (a RuntimeError subclass, so old handlers keep
+    working) — callers can catch exactly this condition."""
+    q = MessageQueue()
+    q.evict_scope("s0")
+    with pytest.raises(StaleScopeError, match=r"scope 's0'.*retired"):
+        q.push("a", "b", "s0/late", jnp.zeros((1,)))
+    with pytest.raises(StaleScopeError, match=r"scope 's0'.*retired"):
+        q.pull("a", "b", "s0/late", timeout=0.1)
+    assert issubclass(StaleScopeError, RuntimeError)
+
+
+def test_pull_timeout_is_named_and_blames_producer_and_scope():
+    """The timeout error is the NAMED PullTimeout (TimeoutError
+    subclass) and names the producing section and the iteration scope
+    being waited on."""
+    q = MessageQueue()
+    with pytest.raises(PullTimeout,
+                       match=r"producer section 'vit'.*scope 's3'"):
+        q.pull("vit", "llm", "s3/emb.1", timeout=0.1)
+    # unscoped keys still name the producer, without a scope clause
+    with pytest.raises(PullTimeout, match=r"producer section 'a'"):
+        q.pull("a", "b", "plainkey", timeout=0.1)
+
+
+def test_evict_scope_logs_leftovers(caplog):
+    """Leftover eviction must leave a log trail naming scope, edge and
+    keys — a producer pushed something no consumer ever pulled."""
+    q = MessageQueue()
+    q.push("a", "b", "s0/orphan.0", jnp.zeros((2,)))
+    q.push("a", "b", "s0/orphan.1", jnp.zeros((2,)))
+    with caplog.at_level(logging.WARNING, logger="repro.messages"):
+        q.evict_scope("s0")
+    msgs = [r.getMessage() for r in caplog.records
+            if r.name == "repro.messages"]
+    assert len(msgs) == 1
+    assert "'s0'" in msgs[0] and "a->b" in msgs[0]
+    assert "s0/orphan.0" in msgs[0] and "s0/orphan.1" in msgs[0]
+    # a clean eviction logs nothing
+    caplog.clear()
+    q.push("a", "b", "s1/x", jnp.zeros((2,)))
+    q.pull("a", "b", "s1/x")
+    with caplog.at_level(logging.WARNING, logger="repro.messages"):
+        q.evict_scope("s1")
+    assert not [r for r in caplog.records if r.name == "repro.messages"]
+
+
+def test_stats_per_edge_after_eviction():
+    """stats() must reflect eviction: depth and buffered bytes drop to
+    zero for the evicted scope while other scopes' bytes survive."""
+    q = MessageQueue()
+    q.push("a", "b", "s0/x", jnp.zeros((4, 2), jnp.float32))
+    q.push("a", "b", "s1/y", jnp.zeros((8,), jnp.float32))
+    q.push("b", "c", "s0/z", jnp.zeros((2,), jnp.float32))
+    q.evict_scope("s0")
+    st = q.stats()
+    assert st["edges"]["a->b"] == {"depth": 1, "pending": ["s1/y"],
+                                   "bytes": 8 * 4}
+    assert st["edges"]["b->c"] == {"depth": 0, "pending": [], "bytes": 0}
+    # totals are cumulative push-side counters, untouched by eviction
+    assert st["pushes"] == 3

@@ -6,7 +6,6 @@ import subprocess
 import sys
 from pathlib import Path
 
-import pytest
 
 DRIVERS = Path(__file__).parent / "drivers"
 

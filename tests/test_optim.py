@@ -11,8 +11,7 @@ except ImportError:     # tier-1 must collect without hypothesis installed
     HAVE_HYPOTHESIS = False
 
 from repro.optim import adamw
-from repro.optim.compression import (ErrorFeedback, _dequant_int8,
-                                     _quant_int8, ef_init, wire_bytes)
+from repro.optim.compression import _dequant_int8, _quant_int8, ef_init, wire_bytes
 
 
 def test_adamw_converges_on_quadratic():

@@ -1,12 +1,11 @@
 """Two-stage planner (§3.2): constraint satisfaction, fanout equation,
 memory bounds, and the Fig.9 teacher-mbs calibration."""
-import pytest
 
 from repro.configs import get_config
 from repro.core import cost_model as cmdl
 from repro.core.graph import build_distill_graph, build_vlm_graph
 from repro.core.planner import (candidate_parallelisms, plan, plan_critical)
-from repro.core.types import ArchConfig, ParallelConfig, V5E
+from repro.core.types import ParallelConfig, V5E
 from repro.models.vlm import vit_config
 
 

@@ -1,7 +1,6 @@
 """Wavefront scheduler (Algorithm 1) + timeline simulator properties,
 including the paper's Figure-7 worked example and hypothesis-based
 invariants."""
-import math
 
 import pytest
 

@@ -67,6 +67,46 @@ def test_speedup_vs_reference_n64():
     assert t_ref >= 5.0 * t_fast, (t_ref, t_fast)
 
 
+def test_adversarial_float_ties_keep_divergence_contract():
+    """Regression for the early-abort tie semantics, on inputs BUILT to
+    accumulate float drift (0.1/0.2-style durations whose partial sums
+    are not exactly representable, plus exact duplicates so insertion
+    positions tie constantly).
+
+    The equivalence contract (core/scheduler.py module docstring) does
+    NOT promise bit-identical orders here — an ulp of accumulation drift
+    may flip a tie and the two algorithms may commit different, equally
+    scoring insertions.  What it does promise, and what this test pins
+    down for both the fast path and the reference oracle:
+
+    * the result is a permutation of the input (a valid schedule);
+    * the reported makespan is exact: re-simulating the committed order
+      reproduces it bit-for-bit (evaluator exactness on every input);
+    * both report the identical fifo_makespan (same FIFO baseline);
+    * neither is ever worse than FIFO (the never-worse guard).
+    """
+    for seed in range(8):
+        rng = random.Random(7000 + seed)
+        soup = [0.1, 0.2, 0.3, 0.7, 0.1 + 0.2, 1.0 - 0.7]
+        samples = []
+        for i in range(rng.randint(6, 14)):
+            base = [rng.choice(soup) for _ in range(6)]
+            samples.append(Sample(i, *base))
+            if rng.random() < 0.5:          # exact-duplicate tie fodder
+                samples.append(Sample(len(samples), *base))
+        for i, s in enumerate(samples):
+            samples[i] = Sample(i, *s.tuple6)
+        fast = wavefront_schedule(samples)
+        ref = wavefront_schedule_reference(samples)
+        for tag, res in (("fast", fast), ("ref", ref)):
+            assert sorted(x.idx for x in res.order) == \
+                list(range(len(samples))), (seed, tag)
+            assert res.makespan == simulate(res.order).makespan, \
+                (seed, tag)
+            assert res.makespan <= res.fifo_makespan, (seed, tag)
+        assert fast.fifo_makespan == ref.fifo_makespan, seed
+
+
 def test_early_abort_never_changes_empty_and_single():
     assert wavefront_schedule([]).makespan == 0.0
     one = [Sample(0, 1.0, 2.0, 0.5, 0.25, 3.0, 0.75)]

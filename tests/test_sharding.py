@@ -1,8 +1,6 @@
 """Sharding rules: logical-axis mapping, divisibility fallbacks, ZeRO
 extension, cache specs — checked against AbstractMesh (no devices)."""
 import jax
-import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -87,7 +85,6 @@ def test_kv_cache_spec_fallbacks():
 
 
 def test_param_shardings_tree():
-    from repro.configs import get_reduced
     from repro.models import transformer as tf
     cfg = get_config("granite-3-8b")
     specs = tf.lm_specs(cfg)

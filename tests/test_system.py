@@ -6,7 +6,6 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as cfgs
 from repro.core.types import ParallelConfig, ShapeConfig
