@@ -27,12 +27,15 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    """smoke=True shrinks every shape ~4× in the expensive dim so CI can
+    exercise the whole bench in seconds; those numbers are not
+    comparable to the committed full-shape rows."""
     rows = []
     ks = jax.random.split(jax.random.PRNGKey(0), 6)
 
     # flash attention vs naive
-    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    B, S, H, KV, D = 1, (256 if smoke else 1024), 8, 2, 64
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
@@ -49,7 +52,7 @@ def run() -> list:
                  round(flops / t2 / 1e9, 2)))
 
     # distill KL chunked vs naive (vocab 32k)
-    N, Ds, V = 256, 512, 32768
+    N, Ds, V = 256, 512, (8192 if smoke else 32768)
     hs = jax.random.normal(ks[0], (N, Ds))
     ws = jax.random.normal(ks[1], (Ds, V)) * 0.05
     ht = jax.random.normal(ks[2], (N, Ds))
@@ -67,7 +70,7 @@ def run() -> list:
                  round(kl_flops / t2 / 1e9, 2)))
 
     # SSD chunked vs sequential scan
-    b, s, h, p, n = 1, 2048, 8, 64, 64
+    b, s, h, p, n = 1, (512 if smoke else 2048), 8, 64, 64
     x = jax.random.normal(ks[0], (b, s, h, p))
     dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
     A = -jnp.exp(jax.random.normal(ks[2], (h,)))

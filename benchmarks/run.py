@@ -17,6 +17,14 @@ so the realized-performance trajectory is tracked in-tree.
 wire bytes — each asserted via the declarative gate files, see
 bench_step_roofline.py) and writes ``BENCH_step_roofline.json`` at the
 repo root.
+``--cp-attention`` runs the CP-attention comm scoreboard (overlap-
+pipelined ulysses a2a chunking + head-replicated MQA wire reduction,
+asserted via the ``cp_overlap`` / ``ulysses_mqa`` gate files against
+compiled post-SPMD HLO — see bench_cp_attention.py) and writes
+``BENCH_cp_attention.json`` at the repo root.
+``--kernels`` runs the kernel micro-benchmarks alone and writes their
+rows (wall time + derived GFLOP/s) to ``BENCH_kernels.json`` at the
+repo root; with ``--smoke`` the shapes shrink and no JSON is written.
 ``--lint`` runs the static-analysis suite (``python -m repro.analysis``):
 deadlock/donation passes over every registered workload spec plus a
 schema check of the committed HLO gate files.
@@ -91,6 +99,49 @@ def step_roofline() -> None:
           flush=True)
 
 
+def cp_attention() -> None:
+    """Run bench_cp_attention in its own interpreter (8 virtual devices)
+    and record the scoreboard at the repo root.  The bench asserts the
+    comm claims via the cp_overlap / ulysses_mqa gate files; a
+    regression fails this command."""
+    env = dict(os.environ, PYTHONPATH=str(_ROOT / "src"))
+    cmd = [sys.executable, str(_ROOT / "benchmarks" /
+                               "bench_cp_attention.py")]
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=1800)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        sys.exit(proc.returncode)
+    data = json.loads(proc.stdout.strip().splitlines()[-1])
+    out = _ROOT / "BENCH_cp_attention.json"
+    out.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+    ov, mqa = data["overlap"], data["mqa"]
+    print(f"overlap_a2a_count,{ov['a2a_count_overlap']:g}", flush=True)
+    print(f"overlap_min_payload_ratio,{ov['min_payload_ratio']:.4f}",
+          flush=True)
+    print(f"overlap_wire_ratio,{ov['wire_ratio']:.4f}", flush=True)
+    print(f"mqa_wire_vs_allgather,{mqa['wire_ratio_vs_allgather']:.4f}",
+          flush=True)
+
+
+def kernels(smoke: bool) -> None:
+    """Run the kernel micro-benchmarks alone; record the rows at the
+    repo root (full run only — smoke shapes aren't comparable)."""
+    from benchmarks import bench_kernels
+    rows = bench_kernels.run(smoke=smoke)
+    print("name,us_per_call,gflops")
+    for row in rows:
+        print(",".join(str(x) for x in row), flush=True)
+    if smoke:
+        return
+    out = _ROOT / "BENCH_kernels.json"
+    out.write_text(json.dumps(
+        {"rows": [{"name": n, "us_per_call": t, "gflops": g}
+                  for n, t, g in rows]}, indent=2) + "\n")
+    print(f"wrote {out}", flush=True)
+
+
 def lint() -> None:
     """Run the static-analysis suite in its own interpreter (same entry
     point as ``python -m repro.analysis``)."""
@@ -112,6 +163,15 @@ def main() -> None:
                     help="run the HLO-derived distributed-step scoreboard "
                          "(subprocess, 8 virtual devices) and write "
                          "BENCH_step_roofline.json at the repo root")
+    ap.add_argument("--cp-attention", action="store_true",
+                    help="run the CP-attention comm scoreboard "
+                         "(subprocess, 8 virtual devices; gate-asserted) "
+                         "and write BENCH_cp_attention.json at the repo "
+                         "root")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run the kernel micro-benchmarks alone and "
+                         "write BENCH_kernels.json at the repo root "
+                         "(with --smoke: small shapes, no JSON)")
     ap.add_argument("--lint", action="store_true",
                     help="run the static-analysis suite (deadlock/"
                          "donation passes over registered workload specs "
@@ -126,6 +186,12 @@ def main() -> None:
         return
     if args.step_roofline:
         step_roofline()
+        return
+    if args.cp_attention:
+        cp_attention()
+        return
+    if args.kernels:
+        kernels(args.smoke)
         return
 
     names = ["scheduler"]

@@ -36,6 +36,14 @@ expression over symbols, e.g. ``"vocab/pp"`` or ``"0.05*pp"``):
 * ``collectives_subset`` — the families executed by ``program`` must be
   within ``allowed`` (the regime's declared collective profile: an
   unexpected all-gather = silent replication).
+* ``collective_count`` — number of executed collectives of ``family``
+  (all families when omitted) in ``program``, compared ``op`` ``value``
+  (e.g. overlap-pipelined CP issues 2 + 2·chunks a2as, and XLA's
+  combiner passes must not have re-merged them).
+* ``collective_payload_ratio`` — ``agg`` (``min``/``max``) over the
+  per-op payload bytes of ``family`` collectives in ``num_program``,
+  divided by the same aggregate in ``den_program``, within ``rtol`` of
+  ``target`` (e.g. the smallest a2a shrinks ÷chunks under overlap).
 
 Every check yields a Finding (ERROR on failure, INFO with the measured
 value on pass) and its measurement is returned keyed by the check id,
@@ -65,7 +73,8 @@ _OPS = {
 }
 
 _KINDS = ("dot_flops", "dot_flops_ratio", "wire_total_ratio",
-          "wire_dtype", "family_dtype_wire", "collectives_subset")
+          "wire_dtype", "family_dtype_wire", "collectives_subset",
+          "collective_count", "collective_payload_ratio")
 
 _EXPR_RE = re.compile(r"^\s*[\w.]+(\s*[*/]\s*[\w.]+)*\s*$")
 
@@ -128,11 +137,19 @@ def validate_gate(raw: Dict[str, Any], source: str = "<gate>") -> None:
                     f"{where}: references program {p!r} not declared in "
                     f"programs {sorted(programs)}")
         if kind in ("dot_flops", "wire_dtype", "family_dtype_wire",
-                    "wire_total_ratio"):
+                    "wire_total_ratio", "collective_count"):
             if chk.get("op") not in _OPS:
                 raise ValueError(f"{where}: op {chk.get('op')!r} not in "
                                  f"{sorted(_OPS)}")
             resolve(chk.get("value", None), symbols)
+        if kind == "collective_payload_ratio":
+            resolve(chk.get("target", None), symbols)
+            if chk.get("agg", "min") not in ("min", "max"):
+                raise ValueError(f"{where}: agg {chk.get('agg')!r} must "
+                                 "be 'min' or 'max'")
+            if not isinstance(chk.get("family"), str):
+                raise ValueError(f"{where}: collective_payload_ratio "
+                                 "needs a 'family' string")
         if kind == "dot_flops":
             resolve(chk.get("width", None), symbols)
         if kind == "dot_flops_ratio":
@@ -286,6 +303,58 @@ def evaluate(gate: Gate, programs: Dict[str, str], *,
                     + f" = {val:.4g} vs {chk['op']} {want:g}"
                     + (f" ({note})" if note and sev == Severity.ERROR
                        else ""))
+        elif kind == "collective_count":
+            fam = chk.get("family")
+            ops = [op for op in ra.collective_ops(programs[chk["program"]])
+                   if fam is None or op.family == fam]
+            val = sum(op.count for op in ops)
+            measured[cid] = val
+            want = resolve(chk["value"], syms)
+            label = fam or "all-families"
+            if _OPS[chk["op"]](val, want):
+                rep.add(Severity.INFO, "hlo.collective_count", subject,
+                        f"{label} count {val:g} {chk['op']} {want:g}")
+            else:
+                by_fam = {}
+                for op in ra.collective_ops(programs[chk["program"]]):
+                    by_fam[op.family] = by_fam.get(op.family, 0) + op.count
+                rep.add(Severity.ERROR, "hlo.collective_count", subject,
+                        f"{label} count = {val:g}, expected {chk['op']} "
+                        f"{want:g}" + (f" ({note})" if note else "")
+                        + f"; by family: {by_fam}")
+        elif kind == "collective_payload_ratio":
+            fam = chk["family"]
+            agg = min if chk.get("agg", "min") == "min" else max
+
+            def fam_payload(text):
+                sizes = [op.payload_bytes
+                         for op in ra.collective_ops(text)
+                         if op.family == fam]
+                return agg(sizes) if sizes else None
+            num = fam_payload(programs[chk["num_program"]])
+            den = fam_payload(programs[chk["den_program"]])
+            if num is None or den is None or den == 0:
+                rep.add(Severity.ERROR, "hlo.collective_payload_ratio",
+                        subject,
+                        f"no {fam} collectives to compare "
+                        f"(num={num}, den={den})")
+                continue
+            ratio = num / den
+            measured[cid] = ratio
+            target = resolve(chk["target"], syms)
+            rtol = float(chk.get("rtol", 0.1))
+            if (1 - rtol) * target <= ratio <= (1 + rtol) * target:
+                rep.add(Severity.INFO, "hlo.collective_payload_ratio",
+                        subject,
+                        f"{chk.get('agg', 'min')} {fam} payload ratio "
+                        f"{ratio:.3f} within ±{rtol:.0%} of {target:g}")
+            else:
+                rep.add(Severity.ERROR, "hlo.collective_payload_ratio",
+                        subject,
+                        f"{chk.get('agg', 'min')} {fam} payload ratio "
+                        f"{ratio:.3f} outside ±{rtol:.0%} of "
+                        f"target {target:g} (num={num:g} B, den={den:g} B)"
+                        + (f" ({note})" if note else ""))
         elif kind == "collectives_subset":
             fams = ra.collective_families(programs[chk["program"]])
             extra = sorted(set(fams) - set(chk["allowed"]))

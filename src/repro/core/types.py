@@ -203,6 +203,14 @@ class ParallelConfig:
     #   "none" | "bf16" | "int8" (int8 adds error feedback) — see
     #   repro.optim.compression; consumed by the plain-regime train step
     #   and by CompoundRuntime's per-section update dispatch
+    # --- CP attention (repro.dist.context; active when cp > 1) ---
+    cp_impl: str = "auto"         # kernel tier inside the CP shard:
+    #   "auto" | "pallas" | "pallas_interpret" | "ref"
+    cp_mode: str = "auto"         # "auto" | "ulysses" | "ulysses_mqa" |
+    #   "allgather" — auto picks ulysses when heads divide, else the
+    #   comm-model-cheaper of ulysses_mqa / allgather
+    cp_overlap_chunks: int = 1    # >1: issue per-chunk K/V a2as under
+    #   ulysses and merge partial flash outputs (exact); must divide S/cp
 
     @property
     def devices(self) -> int:

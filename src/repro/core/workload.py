@@ -737,7 +737,10 @@ class CompoundRuntime:
             if self._regime[name] == "cp":
                 from repro.dist import context as cpx
                 cp_impl = cpx.cp_attention_impl(
-                    mesh, batch_axes=shd.dp_axes(mesh) or None)
+                    mesh, batch_axes=shd.dp_axes(mesh) or None,
+                    mode=s.parallel.cp_mode, impl=s.parallel.cp_impl,
+                    overlap_chunks=s.parallel.cp_overlap_chunks,
+                    section=name)
                 ctx = functools.partial(att.attention_impl, cp_impl)
             else:
                 ctx = contextlib.nullcontext

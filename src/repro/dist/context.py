@@ -2,40 +2,65 @@
 ``cp`` knob of a section's ``C^s``).
 
 Long-sequence sections (ViT over visual tokens, 500K-token decode hosts)
-shard the *sequence* across devices.  Two exact execution modes:
+shard the *sequence* across devices.  Three exact execution modes, all
+dispatched through the kernel substrate (``repro.kernels.ops``) so the
+Pallas flash kernel — or its interpret/ref tiers — runs inside the shard:
 
-* ``ulysses``   — DeepSpeed-Ulysses style: all-to-all reshards
+* ``ulysses``     — DeepSpeed-Ulysses style: all-to-all reshards
   [B, S/cp, H, D] → [B, S, H/cp, D], runs full-sequence flash attention on
   a head slice, and all-to-alls back.  Comm is O(S·H·D/cp) per device;
-  requires ``H % cp == 0`` and ``KV % cp == 0``.
-* ``allgather`` — keeps Q sequence-sharded and all-gathers K/V (the
-  fallback for MQA-style sections where KV heads don't divide cp); the
+  requires ``H % cp == 0`` and ``KV % cp == 0``.  With
+  ``overlap_chunks = c > 1`` the K/V a2as are issued per KV chunk and the
+  partial flash outputs are merged online-softmax-exactly
+  (``merge_flash_partials``): total wire bytes are unchanged but each
+  collective shrinks ÷c, so on real hardware the chunk-j+1 a2a overlaps
+  the chunk-j flash compute.  The a2a of a chunked *local* shard
+  interleaves per-device sub-slices, so the gathered chunk's global
+  positions are strided — the flash kernels take them as an explicit
+  ``kv_positions`` operand, keeping causal/window masking exact.
+* ``ulysses_mqa`` — head-replicated ulysses for GQA/MQA sections where
+  ``KV % cp != 0``: replicate each KV head ``r = cp / gcd(KV, cp)`` times
+  (so they head-shard) and run plain ulysses a2as.  Per-device wire is
+  (2H/cp + 2KV/gcd)·(cp−1)/cp·B·S·D·itemsize vs the allgather mode's
+  2KV·(…) — cheaper iff H/(cp·KV) + 1/gcd(KV, cp) < 1, so ``auto``
+  consults the roofline comm model rather than assuming (for pure MQA,
+  KV = 1, replication never wins and allgather stays optimal).
+* ``allgather``   — keeps Q sequence-sharded and all-gathers K/V; the
   causal mask is offset per shard.
 
-Both modes are numerically exact (checked against the naive reference in
-``tests/drivers/driver_pipeline_cp.py``) and differentiable — the flash
-custom-VJP recomputes inside the shard, so the backward pass reuses the
-same collectives (transposed) the forward issued.
+All modes are numerically exact (checked against the naive reference in
+``tests/drivers/driver_pipeline_cp.py``, forward and backward) and
+differentiable — the flash custom-VJPs recompute inside the shard, so the
+backward pass reuses the same collectives (transposed) the forward issued;
+the chunked path additionally differentiates through the lse merge via the
+``(do, dlse)``-aware VJP.
 
 End-to-end wiring: ``repro.train.step.build_train_step`` dispatches on the
 mesh — a non-trivial ``seq`` axis (``ParallelConfig.cp > 1``) installs
 :func:`cp_attention_impl` as the model's full-sequence attention
-implementation via ``repro.models.attention.attention_impl``, so every
-self-attention call in the train step runs context-parallel.  The shard_map
-is manual over the ``seq`` (and optionally batch/data) axes only; any other
+implementation via ``repro.models.attention.attention_impl``, threading
+``ParallelConfig.cp_impl`` / ``cp_mode`` / ``cp_overlap_chunks`` and the
+installing section's name (for error attribution).  The shard_map is
+manual over the ``seq`` (and optionally batch/data) axes only; any other
 mesh axes are replicated *inside* the attention body while the surrounding
 computation stays GSPMD-sharded — exact in all compositions (cp×tp, dp×cp).
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import AXIS_MODEL, AXIS_SEQ, axis_size, shard_map
-from repro.kernels import ref
+from repro.kernels import ops as kops
+from repro.kernels.flash_attention import merge_flash_partials
+
+CP_MODES = ("auto", "ulysses", "ulysses_mqa", "allgather")
 
 
 def _cp_axis(mesh, axis: Optional[str]) -> str:
@@ -46,17 +71,71 @@ def _cp_axis(mesh, axis: Optional[str]) -> str:
     return AXIS_SEQ if AXIS_SEQ in mesh.axis_names else AXIS_MODEL
 
 
+def _ulysses_ok(H: int, KV: int, cp: int) -> bool:
+    return H % cp == 0 and KV % cp == 0
+
+
+def _mqa_ok(H: int, KV: int, cp: int) -> bool:
+    if H % cp or H % KV:
+        return False
+    r = cp // math.gcd(KV, cp)
+    return (H // KV) % r == 0
+
+
+def resolve_cp_mode(mode: str, *, H: int, KV: int, cp: int,
+                    section: Optional[str] = None) -> str:
+    """Resolve ``auto`` to a concrete CP attention mode; validate explicit
+    modes against the head counts (no silent fallbacks — a requested mode
+    that can't run is a config error, attributed to ``section``)."""
+    where = f" (section {section!r})" if section else ""
+    if mode not in CP_MODES:
+        raise ValueError(f"cp_attention{where}: unknown mode {mode!r}, "
+                         f"expected one of {CP_MODES}")
+    if cp == 1:
+        return "ulysses"            # degenerate: no resharding either way
+    if mode == "auto":
+        if _ulysses_ok(H, KV, cp):
+            return "ulysses"
+        from repro.roofline.analysis import cp_attention_comm
+        ag = cp_attention_comm("allgather", H=H, KV=KV, D=1, cp=cp, S=cp)
+        if _mqa_ok(H, KV, cp):
+            mqa = cp_attention_comm("ulysses_mqa", H=H, KV=KV, D=1,
+                                    cp=cp, S=cp)
+            if mqa["wire_bytes"] < ag["wire_bytes"]:
+                return "ulysses_mqa"
+        return "allgather"
+    if mode == "ulysses" and not _ulysses_ok(H, KV, cp):
+        raise ValueError(
+            f"cp_attention{where}: mode='ulysses' needs H % cp == 0 and "
+            f"KV % cp == 0, got H={H}, KV={KV}, cp={cp} — use "
+            f"'ulysses_mqa', 'allgather', or 'auto'")
+    if mode == "ulysses_mqa" and not _mqa_ok(H, KV, cp):
+        raise ValueError(
+            f"cp_attention{where}: mode='ulysses_mqa' needs H % cp == 0 "
+            f"and cp/gcd(KV, cp) to divide H/KV, got H={H}, KV={KV}, "
+            f"cp={cp}")
+    return mode
+
+
 def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
-                 mode: str = "ulysses", causal: bool = True,
+                 mode: str = "auto", causal: bool = True,
                  window: int = 0, scale: Optional[float] = None,
                  block_q: int = 512, block_kv: int = 512,
-                 batch_axes=None):
+                 batch_axes=None, impl: str = "auto",
+                 overlap_chunks: int = 1,
+                 section: Optional[str] = None):
     """Context-parallel GQA attention.
 
     q [B, S, H, D]; k, v [B, S, KV, D] — logically full-sequence arrays
     whose sequence dim is (or will be, via the in_specs) sharded over the
     CP axis.  Returns [B, S, H, D] with the same layout as q.
 
+    impl — kernel tier for the in-shard flash calls
+    (``repro.kernels.ops`` dispatch: auto/pallas/pallas_interpret/ref).
+    overlap_chunks — ulysses only: issue the K/V a2as in this many
+    per-chunk collectives and merge partial flash outputs (exact); must
+    divide S/cp.  Ignored by the allgather/ulysses_mqa modes (their K/V
+    movement has no chunkable a2a chain).
     batch_axes — mesh axes (name or tuple) to keep the batch dim sharded
     over inside the shard_map (the dp axes of a section mesh); ignored when
     B doesn't divide them.  Attention is batch-parallel, so this only
@@ -67,9 +146,19 @@ def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
     B, S, H, D = q.shape
     KV = k.shape[2]
     assert S % cp == 0, (S, cp)
-    if mode == "ulysses" and (H % cp or KV % cp):
-        # MQA / odd head counts can't head-shard: fall back to KV gather
-        mode = "allgather"
+    mode = resolve_cp_mode(mode, H=H, KV=KV, cp=cp, section=section)
+    where = f" (section {section!r})" if section else ""
+    shard_len = S // cp
+    chunks = int(overlap_chunks)
+    if chunks < 1:
+        raise ValueError(f"cp_attention{where}: overlap_chunks={chunks} "
+                         f"must be >= 1")
+    if mode != "ulysses":
+        chunks = 1
+    if shard_len % chunks:
+        raise ValueError(
+            f"cp_attention{where}: overlap_chunks={chunks} must divide "
+            f"the local sequence shard S/cp={shard_len}")
 
     b_ax = None
     if batch_axes:
@@ -77,31 +166,65 @@ def cp_attention(q, k, v, mesh, *, axis: Optional[str] = None,
         if nb > 1 and B % nb == 0:
             b_ax = batch_axes
     spec = P(b_ax, ax, None, None)
-    shard_len = S // cp
+
+    flash = functools.partial(kops.flash_attention, causal=causal,
+                              window=window, scale=scale, impl=impl,
+                              block_q=block_q, block_kv=block_kv)
 
     def local(ql, kl, vl):
-        idx = jax.lax.axis_index(ax)
-        flash = functools.partial(ref.flash_attention_jnp, causal=causal,
-                                  window=window, scale=scale,
-                                  block_q=block_q, block_kv=block_kv)
+        a2a = functools.partial(jax.lax.all_to_all, axis_name=ax,
+                                split_axis=2, concat_axis=1, tiled=True)
+        a2a_back = functools.partial(jax.lax.all_to_all, axis_name=ax,
+                                     split_axis=1, concat_axis=2,
+                                     tiled=True)
         if mode == "allgather":
+            idx = jax.lax.axis_index(ax)
             kg = jax.lax.all_gather(kl, ax, axis=1, tiled=True)
             vg = jax.lax.all_gather(vl, ax, axis=1, tiled=True)
             return flash(ql, kg, vg, q_offset=idx * shard_len)
+        if mode == "ulysses_mqa":
+            # replicate KV heads so they head-shard, then plain ulysses
+            r = cp // math.gcd(KV, cp)
+            kr = jnp.repeat(kl, r, axis=2)
+            vr = jnp.repeat(vl, r, axis=2)
+            o = flash(a2a(ql), a2a(kr), a2a(vr))
+            return a2a_back(o)
         # ulysses: seq-sharded -> head-sharded (full sequence per device)
-        a2a = functools.partial(jax.lax.all_to_all, axis_name=ax,
-                                split_axis=2, concat_axis=1, tiled=True)
-        o = flash(a2a(ql), a2a(kl), a2a(vl))
-        return jax.lax.all_to_all(o, ax, split_axis=1, concat_axis=2,
-                                  tiled=True)
+        qh = a2a(ql)
+        if chunks == 1:
+            o = flash(qh, a2a(kl), a2a(vl))
+            return a2a_back(o)
+        # overlap-pipelined: per-chunk K/V a2as + partial flash, merged
+        # online-softmax-exactly.  Chunk j of every device's local shard
+        # lands interleaved after the a2a — sub-slice of device d sits at
+        # global positions d·(S/cp) + j·cl + [0, cl) — hence kv_positions.
+        cl = shard_len // chunks
+        parts_o, parts_lse = [], []
+        for j in range(chunks):
+            kj = a2a(jax.lax.slice_in_dim(kl, j * cl, (j + 1) * cl,
+                                          axis=1))
+            vj = a2a(jax.lax.slice_in_dim(vl, j * cl, (j + 1) * cl,
+                                          axis=1))
+            pos = (np.arange(cp)[:, None] * shard_len + j * cl
+                   + np.arange(cl)[None, :]).reshape(-1)
+            oj, lse_j = kops.flash_attention_lse(
+                qh, kj, vj, causal=causal, window=window, scale=scale,
+                kv_positions=jnp.asarray(pos, jnp.int32), impl=impl,
+                block_q=block_q, block_kv=block_kv)
+            parts_o.append(oj)
+            parts_lse.append(lse_j)
+        o, _ = merge_flash_partials(parts_o, parts_lse)
+        return a2a_back(o)
 
     run = shard_map(local, mesh, (spec, spec, spec), spec)
     return run(q, k, v)
 
 
 def cp_attention_impl(mesh, *, axis: Optional[str] = None,
-                      mode: str = "ulysses", batch_axes=None,
-                      block_q: int = 512, block_kv: int = 512):
+                      mode: str = "auto", batch_axes=None,
+                      block_q: int = 512, block_kv: int = 512,
+                      impl: str = "auto", overlap_chunks: int = 1,
+                      section: Optional[str] = None):
     """Model-pluggable CP attention entry point.
 
     Returns a callable with the ``repro.models.attention.attention_impl``
@@ -109,19 +232,24 @@ def cp_attention_impl(mesh, *, axis: Optional[str] = None,
     scale)`` — that runs :func:`cp_attention` over this mesh's CP axis.
     ``build_train_step`` installs it when the section mesh has a
     non-trivial ``seq`` axis, which is how ``ParallelConfig.cp > 1``
-    reaches every self-attention call of the model."""
-    def impl(q, k, v, *, causal=True, window=0, segment_q=None,
-             segment_kv=None, scale=None):
+    reaches every self-attention call of the model.  ``section`` names the
+    installing section in unsupported-feature errors."""
+    where = f" (section {section!r})" if section else ""
+
+    def _impl(q, k, v, *, causal=True, window=0, segment_q=None,
+              segment_kv=None, scale=None):
         if segment_q is not None or segment_kv is not None:
             raise NotImplementedError(
-                "cp_attention: packed-sequence segment ids are not "
-                "supported under context parallelism")
+                f"cp_attention{where}: packed-sequence segment ids are "
+                f"not supported under context parallelism")
         if q.shape[1] != k.shape[1]:
             raise NotImplementedError(
-                "cp_attention: cross-attention (S_q != S_kv) is not "
-                "supported under context parallelism")
+                f"cp_attention{where}: cross-attention (S_q != S_kv) is "
+                f"not supported under context parallelism")
         return cp_attention(q, k, v, mesh, axis=axis, mode=mode,
                             causal=causal, window=window, scale=scale,
                             block_q=block_q, block_kv=block_kv,
-                            batch_axes=batch_axes)
-    return impl
+                            batch_axes=batch_axes, impl=impl,
+                            overlap_chunks=overlap_chunks,
+                            section=section)
+    return _impl

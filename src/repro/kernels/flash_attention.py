@@ -13,9 +13,21 @@ no KV duplication in HBM or VMEM.  Causal/sliding-window masking is
 positional; fully-masked (above-diagonal) blocks skip their matmuls via
 ``pl.when``.
 
+KV positions: both masks are difference-based (``q_pos >= kv_pos`` and
+``q_pos - kv_pos < window``), so a shifted query window (decode q_offset,
+CP allgather shards) and non-contiguous KV rows (chunked-ulysses a2a
+output, which interleaves per-device sub-slices) are both expressed as an
+explicit ``kv_positions`` int32 operand — one extra [1, T] input, loaded
+per kv block; the block-skip condition then uses the block's position
+min/max instead of the static grid arithmetic.
+
 Backward: custom VJP over the blockwise-recompute backward in ``ref.py``
 (identical math to the FlashAttention-2 backward; on TPU it lowers to the
 same scan structure the forward uses).  Forward emits LSE for it.
+``flash_attention_lse`` exposes the (o, lse) pair with a VJP that consumes
+the lse cotangent, which makes :func:`merge_flash_partials` — the
+online-softmax merge of partial results over disjoint KV chunks — exactly
+differentiable end to end.
 
 Validated in interpret mode on CPU against ``ref.mha_reference`` across a
 shape/dtype sweep (tests/test_kernels_flash.py).
@@ -36,9 +48,13 @@ from repro.kernels import ref as _ref
 NEG_INF = -1e30
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
-                acc_ref, m_ref, l_ref, *, scale, causal, window,
-                block_q, block_kv, nkv):
+def _fwd_kernel(q_ref, k_ref, v_ref, *rest, scale, causal, window,
+                block_q, block_kv, nkv, has_pos):
+    if has_pos:
+        pos_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        pos_ref = None
+        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -50,15 +66,19 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
 
     q_pos = iq * block_q + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_kv), 0)
-    kv_pos = ik * block_kv + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_kv), 1)
+    if has_pos:
+        kv_pos = pos_ref[...]                              # [1, bkv]
+        kv_lo, kv_hi = jnp.min(kv_pos), jnp.max(kv_pos)
+    else:
+        kv_pos = ik * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        kv_lo, kv_hi = ik * block_kv, ik * block_kv + block_kv - 1
     run = True
     if causal:
         # skip blocks entirely above the diagonal
-        run = (ik * block_kv) <= (iq * block_q + block_q - 1)
+        run = kv_lo <= (iq * block_q + block_q - 1)
     if window > 0:
-        run = jnp.logical_and(
-            run, (iq * block_q) - (ik * block_kv + block_kv - 1) < window)
+        run = jnp.logical_and(run, (iq * block_q) - kv_hi < window)
 
     @pl.when(run)
     def _compute():
@@ -90,9 +110,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
         lse_ref[0, 0] = m_ref[:, 0] + jnp.log(l)
 
 
-def _flash_fwd_pallas(q, k, v, *, scale, causal, window, block_q, block_kv,
-                      interpret):
-    """q [B,H,S,D]; k,v [B,KV,T,D] -> (o [B,H,S,D], lse [B,H,S])."""
+def _flash_fwd_pallas(q, k, v, kv_pos, *, scale, causal, window, block_q,
+                      block_kv, interpret):
+    """q [B,H,S,D]; k,v [B,KV,T,D]; kv_pos [T] or None
+    -> (o [B,H,S,D], lse [B,H,S])."""
     B, H, S, D = q.shape
     KV, T = k.shape[1], k.shape[2]
     G = H // KV
@@ -104,7 +125,19 @@ def _flash_fwd_pallas(q, k, v, *, scale, causal, window, block_q, block_kv,
 
     kernel = functools.partial(
         _fwd_kernel, scale=scale, causal=causal, window=window,
-        block_q=bq, block_kv=bkv, nkv=nkv)
+        block_q=bq, block_kv=bkv, nkv=nkv, has_pos=kv_pos is not None)
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, bkv, D),
+                     lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        pl.BlockSpec((1, 1, bkv, D),
+                     lambda b, h, iq, ik: (b, h // G, ik, 0)),
+    ]
+    args = [q, k, v]
+    if kv_pos is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bkv), lambda b, h, iq, ik: (0, ik)))
+        args.append(kv_pos.reshape(1, T).astype(jnp.int32))
     out_shape = [
         jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
         jax.ShapeDtypeStruct((B, H, S), jnp.float32),
@@ -112,13 +145,7 @@ def _flash_fwd_pallas(q, k, v, *, scale, causal, window, block_q, block_kv,
     o, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, bkv, D),
-                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, bkv, D),
-                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
@@ -130,64 +157,115 @@ def _flash_fwd_pallas(q, k, v, *, scale, causal, window, block_q, block_kv,
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
     return o, lse
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _flash_pallas(q, k, v, causal, window, scale, blocks, interpret,
-                  out_dtype):
-    o, _ = _fwd(q, k, v, causal, window, scale, blocks, interpret,
-                out_dtype)
-    return o[0]
+def _zgrad(x):
+    if x is None:
+        return None
+    return np.zeros(getattr(x, "shape", ()), jax.dtypes.float0)
 
 
-def _fwd(q, k, v, causal, window, scale, blocks, interpret, out_dtype):
-    B, S, H, D = q.shape
+def _fwd(q, k, v, kv_pos, causal, window, scale, blocks, interpret,
+         out_dtype):
     qt = jnp.swapaxes(q, 1, 2)                  # [B,H,S,D]
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
-    o, lse = _flash_fwd_pallas(qt, kt, vt, scale=scale, causal=causal,
-                               window=window, block_q=blocks[0],
-                               block_kv=blocks[1], interpret=interpret)
+    o, lse = _flash_fwd_pallas(qt, kt, vt, kv_pos, scale=scale,
+                               causal=causal, window=window,
+                               block_q=blocks[0], block_kv=blocks[1],
+                               interpret=interpret)
     o = jnp.swapaxes(o, 1, 2)                   # [B,S,H,D]
     lse_bsh = jnp.transpose(lse, (0, 2, 1))     # [B,S,H]
-    return (o,), (q, k, v, o, lse_bsh)
+    return (o, lse_bsh), (q, k, v, o, lse_bsh, kv_pos)
 
 
-def _fwd_vjp(q, k, v, causal, window, scale, blocks, interpret, out_dtype):
-    (o,), res = _fwd(q, k, v, causal, window, scale, blocks, interpret,
-                     out_dtype)
+def _bwd_res(res):
+    q, k, v, o, lse, kv_pos = res
+    return (q, k, v, o, lse, None, None, jnp.int32(0), kv_pos)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _flash_pallas(q, k, v, kv_pos, causal, window, scale, blocks,
+                  interpret, out_dtype):
+    return _fwd(q, k, v, kv_pos, causal, window, scale, blocks, interpret,
+                out_dtype)[0][0]
+
+
+def _fwd_vjp(q, k, v, kv_pos, causal, window, scale, blocks, interpret,
+             out_dtype):
+    (o, _), res = _fwd(q, k, v, kv_pos, causal, window, scale, blocks,
+                       interpret, out_dtype)
     return o, res
 
 
 def _bwd_vjp(causal, window, scale, blocks, interpret, out_dtype, res, do):
-    q, k, v, o, lse = res
     # blockwise-recompute backward (ref.py) — the lse layout there is
     # [B, S, H] with H = KV*G ordering identical to ours
-    dq, dk, dv, _, _, _ = _ref._flash_bwd(
-        causal, window, scale, blocks,
-        (q, k, v, o, lse, None, None, jnp.int32(0)), do)
-    return dq, dk, dv
+    dq, dk, dv, _, _, _, _ = _ref._flash_bwd(
+        causal, window, scale, blocks, _bwd_res(res), do)
+    return dq, dk, dv, _zgrad(res[5])
 
 
 _flash_pallas.defvjp(_fwd_vjp, _bwd_vjp)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _flash_pallas_lse(q, k, v, kv_pos, causal, window, scale, blocks,
+                      interpret, out_dtype):
+    return _fwd(q, k, v, kv_pos, causal, window, scale, blocks, interpret,
+                out_dtype)[0]
+
+
+def _fwd_lse_vjp(q, k, v, kv_pos, causal, window, scale, blocks, interpret,
+                 out_dtype):
+    return _fwd(q, k, v, kv_pos, causal, window, scale, blocks, interpret,
+                out_dtype)
+
+
+def _bwd_lse_vjp(causal, window, scale, blocks, interpret, out_dtype, res,
+                 cts):
+    do, dlse = cts
+    dq, dk, dv, _, _, _, _ = _ref._flash_bwd_core(
+        causal, window, scale, blocks, _bwd_res(res), do, dlse)
+    return dq, dk, dv, _zgrad(res[5])
+
+
+_flash_pallas_lse.defvjp(_fwd_lse_vjp, _bwd_lse_vjp)
+
+
+def _positions(kv_positions, q_offset, T):
+    """Fold q_offset into explicit KV positions (masks are
+    difference-based, so shifting KV by −q_offset is exact) — this is how
+    traced offsets (CP allgather's axis_index) reach the Pallas kernel."""
+    static_zero = isinstance(q_offset, (int, np.integer)) and q_offset == 0
+    if kv_positions is None:
+        if static_zero:
+            return None
+        return jnp.arange(T, dtype=jnp.int32) - jnp.asarray(
+            q_offset, jnp.int32)
+    kv_positions = jnp.asarray(kv_positions, jnp.int32)
+    if static_zero:
+        return kv_positions
+    return kv_positions - jnp.asarray(q_offset, jnp.int32)
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, segment_q=None,
                     segment_kv=None, scale: Optional[float] = None,
-                    q_offset: int = 0, interpret: bool = False,
+                    q_offset=0, kv_positions=None, interpret: bool = False,
                     block_q: int = 512, block_kv: int = 512):
     """Pallas flash attention; q [B,S,H,D], k/v [B,T,KV,D].
 
-    Segment ids and nonzero q_offset fall back to the jnp blockwise path
-    (they appear only in packed-sequence and CP-sharded contexts where the
-    caller already composes its own kernel)."""
-    if segment_q is not None or segment_kv is not None or q_offset:
+    Segment ids fall back to the jnp blockwise path (they appear only in
+    packed-sequence contexts where the caller already composes its own
+    kernel); q_offset / kv_positions run natively via the positions
+    operand."""
+    if segment_q is not None or segment_kv is not None:
         return _ref.flash_attention_jnp(
             q, k, v, causal=causal, window=window, segment_q=segment_q,
             segment_kv=segment_kv, scale=scale, q_offset=q_offset,
-            block_q=block_q, block_kv=block_kv)
+            kv_positions=kv_positions, block_q=block_q, block_kv=block_kv)
     B, S, H, D = q.shape
     T = k.shape[1]
     scale = scale if scale is not None else D ** -0.5
@@ -196,6 +274,58 @@ def flash_attention(q, k, v, *, causal=True, window=0, segment_q=None,
     if S % bq or T % bkv:
         return _ref.flash_attention_jnp(
             q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, kv_positions=kv_positions,
             block_q=block_q, block_kv=block_kv)
-    return _flash_pallas(q, k, v, bool(causal), int(window), float(scale),
-                         (bq, bkv), bool(interpret), q.dtype)
+    kv_pos = _positions(kv_positions, q_offset, T)
+    return _flash_pallas(q, k, v, kv_pos, bool(causal), int(window),
+                         float(scale), (bq, bkv), bool(interpret), q.dtype)
+
+
+def flash_attention_lse(q, k, v, *, causal=True, window=0,
+                        scale: Optional[float] = None, q_offset=0,
+                        kv_positions=None, interpret: bool = False,
+                        block_q: int = 512, block_kv: int = 512):
+    """Pallas flash attention returning ``(o [B,S,H,D], lse [B,S,H])``.
+
+    The VJP consumes the lse cotangent, so partial results over disjoint
+    KV chunks merged with :func:`merge_flash_partials` differentiate
+    exactly (the overlap-pipelined CP path relies on this)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    if S % bq or T % bkv:
+        return _ref.flash_attention_jnp_lse(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, kv_positions=kv_positions,
+            block_q=block_q, block_kv=block_kv)
+    kv_pos = _positions(kv_positions, q_offset, T)
+    return _flash_pallas_lse(q, k, v, kv_pos, bool(causal), int(window),
+                             float(scale), (bq, bkv), bool(interpret),
+                             q.dtype)
+
+
+def merge_flash_partials(o_parts, lse_parts):
+    """Online-softmax merge of flash partials over disjoint KV chunks.
+
+    o_parts [N,B,S,H,D] (or a list of [B,S,H,D]), lse_parts [N,B,S,H] (or
+    a list of [B,S,H]) -> (o, lse) over the union of the chunks.  Exact:
+    each partial is its chunk's softmax-weighted value sum with its
+    log-sum-exp, so reweighting by ``exp(lse_i − lse)`` reconstructs the
+    global softmax.  A fully-masked chunk carries lse ≈ −1e30 and merges
+    with weight 0, which also zeroes its (meaningless) o part.
+    Differentiable: plain jnp, and the chunk kernels' VJPs consume the
+    resulting (do_i, dlse_i) cotangents.
+    """
+    if isinstance(o_parts, (list, tuple)):
+        o_parts = jnp.stack(o_parts)
+    if isinstance(lse_parts, (list, tuple)):
+        lse_parts = jnp.stack(lse_parts)
+    m = jnp.max(lse_parts, axis=0)
+    w = jnp.exp(lse_parts - m[None])
+    l = jnp.maximum(jnp.sum(w, axis=0), 1e-30)
+    lse = m + jnp.log(l)
+    o = jnp.sum(o_parts.astype(jnp.float32) * (w / l[None])[..., None],
+                axis=0)
+    return o.astype(o_parts.dtype), lse

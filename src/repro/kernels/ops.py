@@ -8,20 +8,26 @@ Each op picks an implementation:
 * ``auto``             — pallas on TPU, ref elsewhere.
 
 The model stack always calls through here, so swapping in the TPU kernel is a
-config change, not a code change.
+config change, not a code change.  A ``REPRO_KERNEL_IMPL`` environment
+variable overrides every dispatch repo-wide (CI forces
+``pallas_interpret`` through the full driver stack with it).
 """
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional
 
 import jax
 
 from repro.kernels import ref
 
+_IMPLS = ("auto", "pallas", "pallas_interpret", "ref", "ref_naive")
 
-@functools.lru_cache(None)
+
 def _on_tpu() -> bool:
+    # deliberately uncached: backend selection can change mid-process
+    # (tests flip platforms; jax.default_backend is already memoized
+    # per-config internally)
     try:
         return jax.default_backend() == "tpu"
     except Exception:          # pragma: no cover
@@ -29,16 +35,24 @@ def _on_tpu() -> bool:
 
 
 def _resolve(impl: str) -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL", "")
+    if env:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"REPRO_KERNEL_IMPL={env!r}: expected one of {_IMPLS}")
+        impl = env
     if impl == "auto":
         return "pallas" if _on_tpu() else "ref"
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}")
     return impl
 
 
 # --------------------------------------------------------------------------- #
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     segment_q=None, segment_kv=None,
-                    scale: Optional[float] = None, q_offset: int = 0,
-                    impl: str = "auto",
+                    scale: Optional[float] = None, q_offset=0,
+                    kv_positions=None, impl: str = "auto",
                     block_q: int = 512, block_kv: int = 512):
     impl = _resolve(impl)
     if impl in ("pallas", "pallas_interpret"):
@@ -46,19 +60,47 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         return fa.flash_attention(
             q, k, v, causal=causal, window=window,
             segment_q=segment_q, segment_kv=segment_kv, scale=scale,
-            q_offset=q_offset, interpret=(impl == "pallas_interpret"),
+            q_offset=q_offset, kv_positions=kv_positions,
+            interpret=(impl == "pallas_interpret"),
             block_q=block_q, block_kv=block_kv)
     if impl == "ref":
         return ref.flash_attention_jnp(
             q, k, v, causal=causal, window=window,
             segment_q=segment_q, segment_kv=segment_kv, scale=scale,
-            q_offset=q_offset, block_q=block_q, block_kv=block_kv)
+            q_offset=q_offset, kv_positions=kv_positions,
+            block_q=block_q, block_kv=block_kv)
     if impl == "ref_naive":
         return ref.mha_reference(
             q, k, v, causal=causal, window=window,
             segment_q=segment_q, segment_kv=segment_kv, scale=scale,
-            q_offset=q_offset)
+            q_offset=q_offset, kv_positions=kv_positions)
     raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# --------------------------------------------------------------------------- #
+def flash_attention_lse(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None, q_offset=0,
+                        kv_positions=None, impl: str = "auto",
+                        block_q: int = 512, block_kv: int = 512):
+    """Flash attention returning ``(o, lse)`` with a merge-aware VJP.
+
+    The chunked CP path calls this per KV chunk and merges the partials
+    with ``flash_attention.merge_flash_partials``; no ``ref_naive`` tier
+    (the naive oracle has no lse output)."""
+    impl = _resolve(impl)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention_lse(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, kv_positions=kv_positions,
+            interpret=(impl == "pallas_interpret"),
+            block_q=block_q, block_kv=block_kv)
+    if impl == "ref":
+        return ref.flash_attention_jnp_lse(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, kv_positions=kv_positions,
+            block_q=block_q, block_kv=block_kv)
+    raise ValueError(f"attention impl {impl!r} has no lse-returning form")
 
 
 # --------------------------------------------------------------------------- #

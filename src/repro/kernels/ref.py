@@ -37,8 +37,13 @@ def _mask(sq, skv, q_pos, kv_pos, causal, window, seg_q, seg_kv):
 
 def mha_reference(q, k, v, *, causal=True, window=0,
                   segment_q=None, segment_kv=None,
-                  q_offset=0, scale: Optional[float] = None):
-    """Naive GQA attention. q_offset: absolute position of q[0] (for decode)."""
+                  q_offset=0, kv_positions=None,
+                  scale: Optional[float] = None):
+    """Naive GQA attention. q_offset: absolute position of q[0] (for decode).
+
+    kv_positions [T] overrides the implicit ``arange(T)`` KV positions —
+    used when the KV rows are a non-contiguous slice of a longer sequence
+    (chunked context-parallel attention)."""
     B, S, H, D = q.shape
     _, T, KV, _ = k.shape
     G = H // KV
@@ -47,7 +52,7 @@ def mha_reference(q, k, v, *, causal=True, window=0,
     logits = jnp.einsum("bskgd,btkd->bkgst", qr.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     q_pos = jnp.arange(S) + q_offset
-    kv_pos = jnp.arange(T)
+    kv_pos = jnp.arange(T) if kv_positions is None else kv_positions
     m = _mask(S, T, q_pos, kv_pos, causal, window,
               None if segment_q is None else segment_q[:, None, None, :],
               None if segment_kv is None else segment_kv[:, None, None, :])
@@ -73,23 +78,48 @@ def _block_mask(q_pos, kv_pos, causal, window, seg_q, seg_kv):
     return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
-def _flash(q, k, v, seg_q, seg_kv, q_offset, causal, window, scale,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _flash(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal, window, scale,
            blocks):
-    return _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, causal, window,
-                      scale, blocks)[0]
+    return _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal,
+                      window, scale, blocks)[0]
 
 
-def _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, causal, window, scale,
-               blocks):
+def _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal, window,
+               scale, blocks):
     block_q, block_kv = blocks
     o, lse = _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window,
-                            scale, q_offset, block_q, block_kv)
-    return o, (q, k, v, o, lse, seg_q, seg_kv, q_offset)
+                            scale, q_offset, block_q, block_kv,
+                            kv_pos=kv_pos)
+    return o, (q, k, v, o, lse, seg_q, seg_kv, q_offset, kv_pos)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _flash_lse(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal, window,
+               scale, blocks):
+    """Like ``_flash`` but returns ``(o, lse)`` with a custom VJP over the
+    joint output — the backward consumes the lse cotangent too, so chunked
+    callers can differentiate through an online-softmax merge of partial
+    results."""
+    o, res = _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal,
+                        window, scale, blocks)
+    return o, res[4]
+
+
+def _flash_lse_fwd(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal,
+                   window, scale, blocks):
+    o, res = _flash_fwd(q, k, v, seg_q, seg_kv, q_offset, kv_pos, causal,
+                        window, scale, blocks)
+    return (o, res[4]), res
+
+
+def _flash_lse_bwd(causal, window, scale, blocks, res, cts):
+    do, dlse = cts
+    return _flash_bwd_core(causal, window, scale, blocks, res, do, dlse)
 
 
 def _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window, scale, q_offset,
-                   block_q, block_kv):
+                   block_q, block_kv, kv_pos=None):
     B, S, H, D = q.shape
     _, T, KV, _ = k.shape
     G = H // KV
@@ -101,6 +131,8 @@ def _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window, scale, q_offset,
             if seg_q is not None else jnp.zeros((nq, 1, 1), jnp.int32))
     skv_r = (seg_kv.reshape(B, nkv, block_kv).transpose(1, 0, 2)
              if seg_kv is not None else jnp.zeros((nkv, 1, 1), jnp.int32))
+    kvp_r = (kv_pos.reshape(nkv, block_kv) if kv_pos is not None
+             else jnp.zeros((nkv, 1), jnp.int32))
 
     def q_block(carry, inp):
         qi, q_blk, sq_blk = inp
@@ -108,10 +140,11 @@ def _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window, scale, q_offset,
 
         def kv_step(acc, kin):
             o_acc, m_acc, l_acc = acc
-            ki, k_blk, v_blk, skv_blk = kin
-            kv_pos = ki * block_kv + jnp.arange(block_kv)
+            ki, k_blk, v_blk, skv_blk, kvp_blk = kin
+            kv_pos_b = (kvp_blk if kv_pos is not None
+                        else ki * block_kv + jnp.arange(block_kv))
             s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk)
-            msk = _block_mask(q_pos, kv_pos, causal, window,
+            msk = _block_mask(q_pos, kv_pos_b, causal, window,
                               sq_blk if seg_q is not None else None,
                               skv_blk if seg_kv is not None else None)
             msk = msk[None, None, None] if msk.ndim == 2 else msk[:, None, None]
@@ -130,7 +163,7 @@ def _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window, scale, q_offset,
         (o, m, l), _ = jax.lax.scan(
             kv_step, (o0, m0, l0),
             (jnp.arange(nkv), kr.transpose(1, 0, 2, 3, 4),
-             vr.transpose(1, 0, 2, 3, 4), skv_r))
+             vr.transpose(1, 0, 2, 3, 4), skv_r, kvp_r))
         l_safe = jnp.maximum(l, 1e-30)
         o = o / l_safe[..., None]
         lse = m + jnp.log(l_safe)
@@ -145,7 +178,18 @@ def _flash_fwd_raw(q, k, v, seg_q, seg_kv, causal, window, scale, q_offset,
 
 
 def _flash_bwd(causal, window, scale, blocks, res, do):
-    q, k, v, o, lse, seg_q, seg_kv, q_offset = res
+    return _flash_bwd_core(causal, window, scale, blocks, res, do, None)
+
+
+def _flash_bwd_core(causal, window, scale, blocks, res, do, dlse):
+    """Blockwise-recompute flash backward.
+
+    ``dlse`` is the cotangent of the forward's log-sum-exp output (None when
+    only ``o`` was consumed).  The FlashAttention-2 backward's per-row term
+    ``delta_i = Σ_d do_id·o_id`` generalizes to ``delta_i − dlse_i`` when the
+    lse is itself differentiated — d lse_i/d s_ij = p_ij, so the joint
+    cotangent of s_ij is p_ij·(dp_ij − delta_i + dlse_i)."""
+    q, k, v, o, lse, seg_q, seg_kv, q_offset, kv_pos = res
     block_q, block_kv = blocks
     B, S, H, D = q.shape
     _, T, KV, _ = k.shape
@@ -158,6 +202,8 @@ def _flash_bwd(causal, window, scale, blocks, res, do):
     of = o.astype(jnp.float32)
     # delta [B,S,H]
     delta = jnp.sum(dof * of, axis=-1)
+    if dlse is not None:
+        delta = delta - dlse.astype(jnp.float32)
 
     qr = qf.reshape(B, nq, block_q, KV, G, D)
     dor = dof.reshape(B, nq, block_q, KV, G, D)
@@ -169,6 +215,8 @@ def _flash_bwd(causal, window, scale, blocks, res, do):
             if seg_q is not None else jnp.zeros((nq, 1, 1), jnp.int32))
     skv_r = (seg_kv.reshape(B, nkv, block_kv).transpose(1, 0, 2)
              if seg_kv is not None else jnp.zeros((nkv, 1, 1), jnp.int32))
+    kvp_r = (kv_pos.reshape(nkv, block_kv) if kv_pos is not None
+             else jnp.zeros((nkv, 1), jnp.int32))
 
     dk0 = jnp.zeros((nkv, B, block_kv, KV, D), jnp.float32)
     dv0 = jnp.zeros((nkv, B, block_kv, KV, D), jnp.float32)
@@ -181,10 +229,11 @@ def _flash_bwd(causal, window, scale, blocks, res, do):
         q_pos = q_offset + qi * block_q + jnp.arange(block_q)
 
         def inner(dq_acc, kin):
-            ki, k_blk, v_blk, skv_blk = kin
-            kv_pos = ki * block_kv + jnp.arange(block_kv)
+            ki, k_blk, v_blk, skv_blk, kvp_blk = kin
+            kv_pos_b = (kvp_blk if kv_pos is not None
+                        else ki * block_kv + jnp.arange(block_kv))
             s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk * scale, k_blk)
-            msk = _block_mask(q_pos, kv_pos, causal, window,
+            msk = _block_mask(q_pos, kv_pos_b, causal, window,
                               sq_blk if seg_q is not None else None,
                               skv_blk if seg_kv is not None else None)
             msk = (msk[None, None, None] if msk.ndim == 2
@@ -202,7 +251,7 @@ def _flash_bwd(causal, window, scale, blocks, res, do):
         dq, (dk_b, dv_b) = jax.lax.scan(
             inner, dq0,
             (jnp.arange(nkv), kr.transpose(1, 0, 2, 3, 4),
-             vr.transpose(1, 0, 2, 3, 4), skv_r))
+             vr.transpose(1, 0, 2, 3, 4), skv_r, kvp_r))
         return (dk_acc + dk_b, dv_acc + dv_b), dq
 
     (dk_all, dv_all), dq_all = jax.lax.scan(
@@ -220,26 +269,22 @@ def _flash_bwd(causal, window, scale, blocks, res, do):
         shape = getattr(x, "shape", ())
         return np.zeros(shape, jax.dtypes.float0)
 
-    return dq, dk, dv, zgrad(seg_q), zgrad(seg_kv), zgrad(q_offset)
+    return (dq, dk, dv, zgrad(seg_q), zgrad(seg_kv), zgrad(q_offset),
+            zgrad(kv_pos))
 
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
+_flash_lse.defvjp(_flash_lse_fwd, _flash_lse_bwd)
 
 
-def flash_attention_jnp(q, k, v, *, causal=True, window=0,
-                        segment_q=None, segment_kv=None,
-                        scale: Optional[float] = None, q_offset=0,
-                        block_q=512, block_kv=512):
-    """Blockwise flash attention (jnp, custom-VJP recompute backward).
-
-    Sequences that don't divide the block size are padded up to the next
-    block multiple (padded KV excluded via segment ids; padded Q rows
-    sliced off) instead of shrinking the block — tiny blocks on odd
-    lengths (e.g. whisper's 1500 frames) would explode the scan trip
-    count."""
-    B, S, H, D = q.shape
+def _flash_prep(q, k, v, segment_q, segment_kv, kv_positions,
+                block_q, block_kv):
+    """Pad inputs up to block multiples (padded KV excluded via segment
+    ids; padded Q rows sliced off by the caller) instead of shrinking the
+    block — tiny blocks on odd lengths (e.g. whisper's 1500 frames) would
+    explode the scan trip count."""
+    B, S, _, _ = q.shape
     T = k.shape[1]
-    scale = scale if scale is not None else D ** -0.5
     bq = min(block_q, S)
     bkv = min(block_kv, T)
     pad_q = (-S) % bq
@@ -254,12 +299,51 @@ def flash_attention_jnp(q, k, v, *, causal=True, window=0,
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
         k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        if kv_positions is not None:
+            kv_positions = jnp.pad(kv_positions, (0, pad_kv),
+                                   constant_values=2 ** 30)
+    if kv_positions is not None:
+        kv_positions = jnp.asarray(kv_positions, jnp.int32)
+    return q, k, v, segment_q, segment_kv, kv_positions, bq, bkv, pad_q
+
+
+def flash_attention_jnp(q, k, v, *, causal=True, window=0,
+                        segment_q=None, segment_kv=None,
+                        scale: Optional[float] = None, q_offset=0,
+                        kv_positions=None, block_q=512, block_kv=512):
+    """Blockwise flash attention (jnp, custom-VJP recompute backward)."""
+    S, D = q.shape[1], q.shape[3]
+    scale = scale if scale is not None else D ** -0.5
+    q, k, v, segment_q, segment_kv, kv_positions, bq, bkv, pad_q = \
+        _flash_prep(q, k, v, segment_q, segment_kv, kv_positions,
+                    block_q, block_kv)
     q_off = jnp.asarray(q_offset, jnp.int32)
-    out = _flash(q, k, v, segment_q, segment_kv, q_off, bool(causal),
-                 int(window), float(scale), (bq, bkv))
+    out = _flash(q, k, v, segment_q, segment_kv, q_off, kv_positions,
+                 bool(causal), int(window), float(scale), (bq, bkv))
     if pad_q:
         out = out[:, :S]
     return out
+
+
+def flash_attention_jnp_lse(q, k, v, *, causal=True, window=0,
+                            scale: Optional[float] = None, q_offset=0,
+                            kv_positions=None, block_q=512, block_kv=512):
+    """Blockwise flash attention returning ``(o [B,S,H,D], lse [B,S,H])``.
+
+    The custom VJP consumes the lse cotangent, so chunked callers (the
+    overlap-pipelined CP path) can differentiate straight through
+    :func:`repro.kernels.flash_attention.merge_flash_partials`."""
+    S, D = q.shape[1], q.shape[3]
+    scale = scale if scale is not None else D ** -0.5
+    q, k, v, segment_q, segment_kv, kv_positions, bq, bkv, pad_q = \
+        _flash_prep(q, k, v, None, None, kv_positions, block_q, block_kv)
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    o, lse = _flash_lse(q, k, v, segment_q, segment_kv, q_off,
+                        kv_positions, bool(causal), int(window),
+                        float(scale), (bq, bkv))
+    if pad_q:
+        o, lse = o[:, :S], lse[:, :S]
+    return o, lse
 
 
 # --------------------------------------------------------------------------- #

@@ -72,6 +72,27 @@ def parallel_regime(mesh: Mesh, parallel: ParallelConfig) -> str:
         raise NotImplementedError(
             "pp×cp composition is not supported (CP's shard_map cannot "
             "nest inside the pipeline's); use pp×tp or cp×tp instead")
+    from repro.dist.context import CP_MODES
+    if parallel.cp_mode not in CP_MODES:
+        raise ValueError(
+            f"ParallelConfig.cp_mode={parallel.cp_mode!r}: expected one "
+            f"of {CP_MODES}")
+    if parallel.cp_impl not in ("auto", "pallas", "pallas_interpret",
+                                "ref"):
+        raise ValueError(
+            f"ParallelConfig.cp_impl={parallel.cp_impl!r}: expected "
+            f"auto/pallas/pallas_interpret/ref")
+    if parallel.cp_overlap_chunks < 1:
+        raise ValueError(
+            f"ParallelConfig.cp_overlap_chunks="
+            f"{parallel.cp_overlap_chunks}: must be >= 1")
+    if parallel.cp_overlap_chunks > 1 and parallel.cp_mode in (
+            "allgather", "ulysses_mqa"):
+        raise ValueError(
+            f"ParallelConfig.cp_overlap_chunks="
+            f"{parallel.cp_overlap_chunks} only applies to the ulysses "
+            f"mode's K/V a2a chain, but cp_mode={parallel.cp_mode!r} "
+            f"was forced")
     return "pp" if pp > 1 else ("cp" if cp > 1 else "plain")
 
 
@@ -254,7 +275,9 @@ def build_train_step(model: Model, mesh: Mesh, parallel: ParallelConfig,
         if regime == "cp":
             from repro.dist import context as cpx
             cp_impl = cpx.cp_attention_impl(
-                mesh, batch_axes=shd.dp_axes(mesh) or None)
+                mesh, batch_axes=shd.dp_axes(mesh) or None,
+                mode=parallel.cp_mode, impl=parallel.cp_impl,
+                overlap_chunks=parallel.cp_overlap_chunks)
         else:
             cp_impl = None
 

@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_lse,
+                                           merge_flash_partials)
 
 SHAPES = [
     # B, S, T, H, KV, D
@@ -102,6 +104,107 @@ def test_q_offset_decode_semantics():
                                 block_q=16, block_kv=16)
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5,
                                rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 24)])
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2)])   # MHA / GQA
+@pytest.mark.parametrize("q_offset", [0, 64])
+def test_merge_matches_monolithic_contiguous(causal, window, H, KV,
+                                             q_offset):
+    """Splitting KV into contiguous chunks, flashing each with its
+    positions, and merging via merge_flash_partials must equal the
+    monolithic call (the overlap-pipelined CP invariant)."""
+    B, S, T, D, C = 1, 64, 128, 16, 4
+    q, k, v = _qkv((B, S, T, H, KV, D), jnp.float32)
+    o_mono = flash_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, interpret=True,
+                             block_q=16, block_kv=16)
+    cl = T // C
+    parts_o, parts_lse = [], []
+    for j in range(C):
+        pos = jnp.arange(j * cl, (j + 1) * cl, dtype=jnp.int32)
+        oj, lj = flash_attention_lse(
+            q, k[:, j * cl:(j + 1) * cl], v[:, j * cl:(j + 1) * cl],
+            causal=causal, window=window, q_offset=q_offset,
+            kv_positions=pos, interpret=True, block_q=16, block_kv=16)
+        parts_o.append(oj)
+        parts_lse.append(lj)
+    o, _ = merge_flash_partials(parts_o, parts_lse)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_mono),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_merge_matches_monolithic_strided():
+    """Strided chunk positions (the a2a-interleaved layout of the CP
+    overlap path: chunk j holds positions d·shard + j·cl + [0, cl) for
+    every device d) must also reproduce the monolithic result, forward
+    and backward."""
+    B, T, H, KV, D = 1, 128, 4, 2, 16
+    cp, chunks = 4, 2
+    shard, cl = T // cp, T // cp // chunks
+    q, k, v = _qkv((B, T, T, H, KV, D), jnp.float32)
+
+    def chunked(q, k, v):
+        parts_o, parts_lse = [], []
+        for j in range(chunks):
+            pos = (np.arange(cp)[:, None] * shard + j * cl
+                   + np.arange(cl)[None, :]).reshape(-1)
+            sel = jnp.asarray(pos, jnp.int32)
+            oj, lj = flash_attention_lse(
+                q, jnp.take(k, sel, axis=1), jnp.take(v, sel, axis=1),
+                causal=True, kv_positions=sel, interpret=True,
+                block_q=16, block_kv=16)
+            parts_o.append(oj)
+            parts_lse.append(lj)
+        return merge_flash_partials(parts_o, parts_lse)[0]
+
+    def mono(q, k, v):
+        return flash_attention(q, k, v, causal=True, interpret=True,
+                               block_q=16, block_kv=16)
+
+    np.testing.assert_allclose(np.asarray(chunked(q, k, v)),
+                               np.asarray(mono(q, k, v)),
+                               atol=2e-5, rtol=2e-5)
+    loss = lambda fn: lambda *a: jnp.sum(jnp.sin(fn(*a)))
+    g1 = jax.grad(loss(chunked), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss(mono), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_merge_all_masked_chunk_is_inert():
+    """A chunk lying entirely in the causal future carries lse ≈ −1e30:
+    the merge must weight it to zero (no NaN/garbage leakage) and its
+    gradient contribution must be exactly zero."""
+    B, S, H, KV, D = 1, 32, 2, 2, 8
+    q, k, v = _qkv((B, S, 64, H, KV, D), jnp.float32)
+    k_past, v_past = k[:, :32], v[:, :32]
+    k_fut, v_fut = k[:, 32:], v[:, 32:]
+    pos_past = jnp.arange(32, dtype=jnp.int32)
+    pos_fut = jnp.arange(32, 64, dtype=jnp.int32)   # all > max q pos
+
+    def merged(kf, vf):
+        o1, l1 = flash_attention_lse(q, k_past, v_past, causal=True,
+                                     kv_positions=pos_past,
+                                     interpret=True, block_q=16,
+                                     block_kv=16)
+        o2, l2 = flash_attention_lse(q, kf, vf, causal=True,
+                                     kv_positions=pos_fut,
+                                     interpret=True, block_q=16,
+                                     block_kv=16)
+        return merge_flash_partials([o1, o2], [l1, l2])[0]
+
+    o = merged(k_fut, v_fut)
+    o_ref = ref.mha_reference(q, k_past, v_past, causal=True)
+    assert bool(jnp.all(jnp.isfinite(o)))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    gk, gv = jax.grad(lambda kf, vf: jnp.sum(merged(kf, vf) ** 2),
+                      argnums=(0, 1))(k_fut, v_fut)
+    np.testing.assert_array_equal(np.asarray(gk), 0.0)
+    np.testing.assert_array_equal(np.asarray(gv), 0.0)
 
 
 def test_hypothesis_like_random_sweep():

@@ -151,6 +151,66 @@ def test_num_microbatches_validates_at_build_time():
         ShapeConfig("t", "train", 16, 8), mesh, ParallelConfig(mbs=2)) == 2
 
 
+# ---- CP attention knobs / kernel dispatch --------------------------------- #
+def test_parallel_regime_validates_cp_knobs():
+    axes = ("data", "pipe", "seq", "model")
+    mesh = shd.abstract_mesh((2, 1, 2, 1), axes)
+    with pytest.raises(ValueError, match="cp_mode"):
+        step_mod.parallel_regime(mesh, ParallelConfig(
+            dp=2, cp=2, cp_mode="ring"))
+    with pytest.raises(ValueError, match="cp_impl"):
+        step_mod.parallel_regime(mesh, ParallelConfig(
+            dp=2, cp=2, cp_impl="triton"))
+    with pytest.raises(ValueError, match="cp_overlap_chunks"):
+        step_mod.parallel_regime(mesh, ParallelConfig(
+            dp=2, cp=2, cp_overlap_chunks=0))
+    # chunking only exists on the ulysses a2a chain
+    with pytest.raises(ValueError, match="cp_overlap_chunks"):
+        step_mod.parallel_regime(mesh, ParallelConfig(
+            dp=2, cp=2, cp_mode="allgather", cp_overlap_chunks=2))
+    assert step_mod.parallel_regime(mesh, ParallelConfig(
+        dp=2, cp=2, cp_mode="ulysses", cp_impl="pallas_interpret",
+        cp_overlap_chunks=2)) == "cp"
+
+
+def test_cp_attention_impl_errors_name_section():
+    """CompoundRuntime installs cp_attention_impl with section=<name>;
+    unsupported-feature errors must carry it (the impl raises before
+    touching the mesh, so no devices are needed here)."""
+    from repro.dist.context import cp_attention_impl, resolve_cp_mode
+    impl = cp_attention_impl(None, section="vit_tower")
+    q = jnp.zeros((1, 8, 4, 8))
+    seg = jnp.zeros((1, 8), jnp.int32)
+    with pytest.raises(NotImplementedError, match="vit_tower"):
+        impl(q, q[:, :, :2], q[:, :, :2], segment_q=seg, segment_kv=seg)
+    with pytest.raises(NotImplementedError, match="vit_tower"):
+        impl(q, q[:, :4, :2], q[:, :4, :2])   # S_q != S_kv
+    with pytest.raises(ValueError, match="vit_tower"):
+        resolve_cp_mode("ulysses", H=8, KV=3, cp=4, section="vit_tower")
+
+
+def test_resolve_cp_mode_auto():
+    from repro.dist.context import resolve_cp_mode
+    assert resolve_cp_mode("auto", H=8, KV=4, cp=4) == "ulysses"
+    # KV % cp != 0 but replication is cheap: head-replicated ulysses
+    assert resolve_cp_mode("auto", H=8, KV=4, cp=8) == "ulysses_mqa"
+    # pure MQA: replication never beats gathering one KV head
+    assert resolve_cp_mode("auto", H=8, KV=1, cp=8) == "allgather"
+
+
+def test_kernel_impl_env_override(monkeypatch):
+    from repro.kernels import ops as kops
+    monkeypatch.delenv("REPRO_KERNEL_IMPL", raising=False)
+    assert kops._resolve("ref") == "ref"
+    assert kops._resolve("auto") in ("ref", "pallas")
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas_interpret")
+    assert kops._resolve("ref") == "pallas_interpret"
+    assert kops._resolve("auto") == "pallas_interpret"
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "cuda")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_IMPL"):
+        kops._resolve("auto")
+
+
 # ---- attention impl plumbing --------------------------------------------- #
 def test_attention_impl_override_is_consulted():
     """models.attention routes full-sequence attention through the
